@@ -1,0 +1,50 @@
+"""Shared benchmark plumbing.
+
+Model mapping (paper -> assigned archs on TPU v5e):
+  OPT-13B chatbot      -> yi-6b        (same serving class on 16 GB chips)
+  OPT-66B code/summar. -> phi3-medium-14b
+  OPT-175B chatbot     -> internvl2-76b (largest assigned dense backbone)
+plus mixtral-8x22b for the beyond-paper MoE serving row.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.core.latency_model import LatencyModel, Parallelism
+from repro.core.workload import (HUMANEVAL, LONGBENCH, SHAREGPT, WorkloadSpec,
+                                 derive_slos, reference_tp)
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+APPS = {
+    "chatbot-small": ("yi-6b", SHAREGPT),
+    "chatbot-large": ("internvl2-76b", SHAREGPT),
+    "code": ("phi3-medium-14b", HUMANEVAL),
+    "summarization": ("phi3-medium-14b", LONGBENCH),
+    "moe-chatbot": ("mixtral-8x22b", SHAREGPT),
+}
+
+
+def app_setup(app: str):
+    arch, base_spec = APPS[app]
+    cfg = get_config(arch)
+    lm = LatencyModel(cfg, hw.V5E)
+    spec = derive_slos(base_spec, lm)
+    ref = reference_tp(lm)
+    return cfg, lm, spec, ref

@@ -1,0 +1,45 @@
+"""Fig. 1: P90 TTFT / TPOT vs per-chip rate — colocated full serving vs a
+prefill-only system vs a decode-only system (the paper's motivating gap)."""
+from __future__ import annotations
+
+from repro.core.goodput import attainment_at_rate, max_goodput
+from repro.core.latency_model import Parallelism
+from repro.core.simulator import (InstanceConfig, simulate_colocated,
+                                  simulate_disaggregated)
+
+from .common import app_setup, emit, timed
+
+
+def run(app: str = "chatbot-small", points=(0.5, 1, 2, 4, 8, 16)):
+    cfg, lm, spec, ref = app_setup(app)
+    par = Parallelism(ref, 1)
+
+    def colo(reqs):
+        return simulate_colocated(reqs, lm, InstanceConfig(par, 1))
+
+    def prefill_only(reqs):
+        return simulate_disaggregated(reqs, lm, InstanceConfig(par, 1),
+                                      InstanceConfig(par, 1), phase="prefill")
+
+    def decode_only(reqs):
+        return simulate_disaggregated(reqs, lm, InstanceConfig(par, 1),
+                                      InstanceConfig(par, 1), phase="decode")
+
+    for rate in points:
+        total = rate * ref
+        (rc, us) = timed(attainment_at_rate, colo, spec, total, 400)
+        rp, _ = timed(attainment_at_rate, prefill_only, spec, total, 400)
+        rd, _ = timed(attainment_at_rate, decode_only, spec, total, 400)
+        emit(f"fig1.{app}.rate{rate}", us,
+             f"colo_p90ttft={rc.p90_ttft:.3f};colo_p90tpot={rc.p90_tpot:.4f};"
+             f"prefill_p90ttft={rp.p90_ttft:.3f};"
+             f"decode_p90tpot={rd.p90_tpot:.4f}")
+
+    # headline: per-chip goodput of each mode (paper: 1.6 vs 5.6 & 10 rps)
+    g_colo, us = timed(max_goodput, colo, spec, ref, n_requests=300)
+    g_pre, _ = timed(max_goodput, prefill_only, spec, ref, n_requests=300)
+    g_dec, _ = timed(max_goodput, decode_only, spec, ref, n_requests=300)
+    emit(f"fig1.{app}.goodput", us,
+         f"colo={g_colo.per_chip:.2f};prefill_only={g_pre.per_chip:.2f};"
+         f"decode_only={g_dec.per_chip:.2f};"
+         f"split_gain={(g_pre.per_chip + g_dec.per_chip) / max(2 * g_colo.per_chip, 1e-9):.2f}")

@@ -1,0 +1,63 @@
+"""Fig. 11 ablation: vLLM, vLLM++ (parallelism-searched colocated),
+DistServe-Low (Alg. 2) and DistServe-High (Alg. 1) on the chatbot app."""
+from __future__ import annotations
+
+from repro.core.goodput import max_goodput
+from repro.core.latency_model import Parallelism
+from repro.core.placement import (algo1_high_affinity, algo2_low_affinity,
+                                  ratio_counts, vllm_pp_search)
+from repro.core.simulator import (InstanceConfig, simulate_colocated,
+                                  simulate_disaggregated)
+
+from .common import app_setup, emit, timed
+
+
+def run(app: str = "chatbot-small", n_requests: int = 250):
+    cfg, lm, spec, ref = app_setup(app)
+
+    # vLLM (reference parallelism, per the paper's per-model fixed setting)
+    def vllm(reqs):
+        return simulate_colocated(reqs, lm,
+                                  InstanceConfig(Parallelism(ref, 1), 1))
+    g_vllm, us = timed(max_goodput, vllm, spec, ref, n_requests=n_requests)
+    emit(f"fig11.{app}.vllm", us, f"goodput_per_chip={g_vllm.per_chip:.2f}")
+
+    # vLLM++ — search colocated parallelism
+    (par_pp, g_pp), us = timed(vllm_pp_search, lm, spec, rate=8.0,
+                               n_node=2, m_per_node=8,
+                               n_requests=n_requests)
+    emit(f"fig11.{app}.vllm_pp", us,
+         f"goodput_per_chip={g_pp:.2f};tp={par_pp.tp};pp={par_pp.pp}")
+
+    # DistServe-Low (Alg. 2)
+    pl_low, us = timed(algo2_low_affinity, lm, spec, rate=8.0, n_node=2,
+                       m_per_node=8, n_requests=n_requests)
+    emit(f"fig11.{app}.dist_low", us,
+         f"goodput_per_chip={pl_low.prefill.goodput_per_chip:.2f};"
+         f"ptp={pl_low.prefill.par.tp};dtp={pl_low.decode.par.tp}")
+
+    # DistServe-High (Alg. 1)
+    pl_high, us = timed(algo1_high_affinity, lm, spec, rate=8.0, n_node=2,
+                        m_per_node=8, n_requests=n_requests)
+    # joint goodput at the Alg.-1 replication ratio
+    n, m = ratio_counts(pl_high.prefill.goodput_per_chip,
+                        pl_high.decode.goodput_per_chip,
+                        pl_high.prefill.par.num_chips,
+                        pl_high.decode.par.num_chips)
+
+    def dist_high(reqs):
+        return simulate_disaggregated(
+            reqs, lm, InstanceConfig(pl_high.prefill.par, n),
+            InstanceConfig(pl_high.decode.par, m),
+            transfer_bw=pl_high.kv_bandwidth)
+    chips = (n * pl_high.prefill.par.num_chips
+             + m * pl_high.decode.par.num_chips)
+    g_high, _ = timed(max_goodput, dist_high, spec, chips,
+                      n_requests=n_requests)
+    emit(f"fig11.{app}.dist_high", us,
+         f"goodput_per_chip={g_high.per_chip:.2f};"
+         f"ptp={pl_high.prefill.par.tp};ppp={pl_high.prefill.par.pp};"
+         f"dtp={pl_high.decode.par.tp};dpp={pl_high.decode.par.pp}")
+    emit(f"fig11.{app}.summary", 0.0,
+         f"vllm={g_vllm.per_chip:.2f};vllm_pp={g_pp:.2f};"
+         f"low={pl_low.prefill.goodput_per_chip:.2f};high={g_high.per_chip:.2f}")

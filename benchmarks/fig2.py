@@ -1,0 +1,25 @@
+"""Fig. 2: prefill-decode interference — execution time of one batch as
+decode batch size grows, with and without one piggybacked prefill."""
+from __future__ import annotations
+
+from repro.core.latency_model import Parallelism
+
+from .common import app_setup, emit, timed
+
+
+def run(app: str = "chatbot-small",
+        batch_sizes=(1, 4, 16, 32, 64, 128),
+        prefill_lens=(128, 512, 1024)):
+    cfg, lm, spec, ref = app_setup(app)
+    par = Parallelism(ref, 1)
+    ctx = 512
+    for B in batch_sizes:
+        t_dec, us = timed(lm.decode_time, B, B * ctx, par)
+        row = [f"decode_only={t_dec * 1e3:.2f}ms"]
+        for L in prefill_lens:
+            # colocated iteration = prefill of L plus the decode batch's
+            # bandwidth demand (paper Fig. 2: batch with one prefill req)
+            t_mix = lm.prefill_time([L], par) + t_dec
+            row.append(f"with_prefill{L}={t_mix * 1e3:.2f}ms"
+                       f"(x{t_mix / t_dec:.1f})")
+        emit(f"fig2.{app}.B{B}", us, ";".join(row))

@@ -1,0 +1,49 @@
+"""Fig. 4 + Eq. 1-3: average TTFT under 2-way intra-op vs inter-op
+parallelism for the prefill phase — simulator vs the M/D/1 closed forms."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.latency_model import Parallelism
+from repro.core.simulator import InstanceConfig, simulate_disaggregated
+from repro.core.workload import Request
+
+from .common import app_setup, emit, timed
+
+
+def _uniform(rate, n, L, seed=0):
+    rng = np.random.default_rng(seed)
+    arrive = np.cumsum(rng.exponential(1.0 / rate, n))
+    return [Request(i, float(arrive[i]), L, 1) for i in range(n)]
+
+
+def run(app: str = "chatbot-large", L: int = 512,
+        utils=(0.2, 0.4, 0.6, 0.8)):
+    cfg, lm, spec, ref = app_setup(app)
+    base = Parallelism(max(ref // 2, 1), 1)     # "one GPU" analogue
+    intra = Parallelism(base.tp * 2, 1)
+    inter = Parallelism(base.tp, 2)
+
+    D = lm.prefill_time([L], base)
+    Ds_intra = lm.prefill_time([L], intra)
+    K = D / Ds_intra                             # speedup coefficient
+
+    for util in utils:
+        rate = util / D
+
+        def sim(par):
+            reqs = _uniform(rate, 2500, L)
+            reqs, _ = simulate_disaggregated(
+                reqs, lm, InstanceConfig(par, 1), InstanceConfig(par, 1),
+                lm_tokens=L, phase="prefill")
+            return float(np.mean([r.ttft for r in reqs]))
+
+        (t_intra, us) = timed(sim, intra)
+        t_inter = sim(inter)
+        R = rate
+        eq2 = D + R * D * D / (4 * (2 - R * D))                   # inter-op
+        eq3 = D / K + R * D * D / (2 * K * (K - R * D)) if K > R * D else float("inf")
+        emit(f"fig4.{app}.util{util}", us,
+             f"K={K:.2f};sim_intra={t_intra * 1e3:.1f}ms;eq3={eq3 * 1e3:.1f}ms;"
+             f"sim_inter={t_inter * 1e3:.1f}ms;eq2={eq2 * 1e3:.1f}ms;"
+             f"winner={'intra' if t_intra < t_inter else 'inter'}")

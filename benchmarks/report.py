@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from .roofline import roofline_row
+
+GiB = 1e9
+
+
+def dryrun_table(path: str) -> str:
+    recs = json.load(open(path))
+    hdr = ("| arch | shape | mesh | mode | compile(s) | peak GB/chip | "
+           "args GB/chip | status |\n|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["multi_pod"])):
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | - | - | - | - "
+                        f"| {r['status']} ({r.get('reason', '')[:40]}…) |")
+            continue
+        mem = r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {r['mode']} "
+            f"| {r['compile_s']} | {(mem['peak_bytes'] or 0) / GiB:.1f} "
+            f"| {(mem['argument_bytes'] or 0) / GiB:.1f} | ok |")
+    return hdr + "\n".join(rows)
+
+
+def roofline_table(path: str, mesh: str = "pod1") -> str:
+    recs = json.load(open(path))
+    rows = [roofline_row(r) for r in recs]
+    rows = [r for r in rows if r and r["mesh"] == mesh]
+    hdr = ("| arch | shape | compute(s) | memory(s) | collective(s) | "
+           "dominant | step bound(s) | MODEL/HLO | peak GB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = []
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} "
+            f"| {r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} "
+            f"| **{r['dominant']}** | {r['step_s_bound']:.2e} "
+            f"| {min(r['useful_ratio'], 9.99):.2f} | {r['peak_gb']:.1f} |")
+    return hdr + "\n".join(out)
+
+
+def compare_table(base_path: str, opt_path: str) -> str:
+    """Baseline vs optimized dominant-term comparison (pod1)."""
+    def load(p):
+        return {(r["arch"], r["shape"]): roofline_row(r)
+                for r in json.load(open(p))
+                if r.get("status") == "ok" and not r["multi_pod"]}
+    b, o = load(base_path), load(opt_path)
+    hdr = ("| arch | shape | baseline bound(s) | optimized bound(s) | "
+           "speedup | baseline dom | optimized dom |\n"
+           "|---|---|---|---|---|---|---|\n")
+    rows = []
+    for k in sorted(b):
+        if k not in o:
+            continue
+        rb, ro = b[k], o[k]
+        sp = rb["step_s_bound"] / max(ro["step_s_bound"], 1e-30)
+        rows.append(f"| {k[0]} | {k[1]} | {rb['step_s_bound']:.2e} "
+                    f"| {ro['step_s_bound']:.2e} | {sp:.2f}x "
+                    f"| {rb['dominant']} | {ro['dominant']} |")
+    return hdr + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table("experiments/dryrun_all.json"))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table("experiments/dryrun_all.json"))
+    print("\n## Baseline vs optimized\n")
+    print(compare_table("experiments/dryrun_baseline.json",
+                        "experiments/dryrun_all.json"))

@@ -1,0 +1,127 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_dot_FLOPs / (chips x 197e12)
+  memory term     = structural bytes / (chips x 819e9)
+  collective term = per-chip wire bytes: ICI / (links x 50e9) + DCN / 6.25e9
+FLOPs/bytes come from the trip-count-corrected jaxpr walk (global, divided
+by chip count); collective bytes from the trip-weighted HLO parse (already
+per-chip). MODEL_FLOPS = 6*N*D (train) / 2*N_active*D (inference) for the
+usefulness ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config, get_shape
+from repro.core import hw
+from repro.core.latency_model import LatencyModel
+
+CHIP = hw.V5E
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    lm = LatencyModel(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        # fwd+bwd = 3x matmul flops (2N per token fwd) + attention
+        gemm = 3 * lm.gemm_flops_per_token() * tokens
+        attn = 3 * lm.attn_flops([S] * B)
+        return gemm + attn
+    if shape.kind == "prefill":
+        tokens = B * S
+        return lm.gemm_flops_per_token() * tokens + lm.attn_flops([S] * B)
+    # decode: one token per sequence + attention over the cache
+    gemm = lm.gemm_flops_per_token() * B
+    if cfg.family != "ssm":
+        n_attn = cfg.num_layers
+        if cfg.family == "hybrid":
+            n_attn = cfg.num_layers // max(cfg.hybrid_attn_every, 1)
+        if cfg.local_global_ratio:
+            r = cfg.local_global_ratio
+            n_glob = cfg.num_layers // (r + 1)
+            n_loc = cfg.num_layers - n_glob
+            gemm += 4 * cfg.q_dim * B * (n_loc * min(S, cfg.sliding_window)
+                                         + n_glob * S)
+        else:
+            eff = min(S, cfg.sliding_window) if cfg.sliding_window else S
+            gemm += 4 * cfg.q_dim * eff * B * n_attn
+    return gemm
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec.get("n_devices", 512 if rec["multi_pod"] else 256)
+    jc = rec["cost_corrected"]
+    coll = rec["collectives_corrected"]
+    t_compute = jc["dot_flops"] / chips / CHIP.peak_flops_bf16
+    t_memory = (jc["struct_bytes"] / chips) / CHIP.hbm_bw
+    ici_bw = CHIP.ici_bw * CHIP.ici_links
+    t_coll = coll["ici_bytes"] / ici_bw + coll["dcn_bytes"] / CHIP.dcn_bw
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "pod2" if rec["multi_pod"] else "pod1",
+        "mode": rec["mode"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_s_bound": max(terms.values()),
+        "model_flops": mf,
+        "hlo_flops": jc["dot_flops"],
+        "useful_ratio": mf / max(jc["dot_flops"], 1.0),
+        "roofline_frac": (t_compute / max(terms.values())
+                          if max(terms.values()) > 0 else 0.0),
+        "peak_gb": (rec["memory"]["peak_bytes"] or 0) / 1e9,
+        "arg_gb": (rec["memory"]["argument_bytes"] or 0) / 1e9,
+    }
+
+
+def analyze(path: str = "experiments/dryrun_all.json",
+            out: str = "experiments/roofline.json") -> List[Dict]:
+    recs = json.load(open(path))
+    rows = [r for r in (roofline_row(rec) for rec in recs) if r]
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute(s) | memory(s) | collective(s) |"
+           " dominant | useful | roofline |\n|---|---|---|---|---|---|---|---|---|\n")
+    body = []
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        body.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | **{r['dominant']}** "
+            f"| {min(r['useful_ratio'], 9.99):.2f} "
+            f"| {r['roofline_frac']:.2f} |")
+    return hdr + "\n".join(body)
+
+
+def run():
+    from .common import emit
+    if not os.path.exists("experiments/dryrun_all.json"):
+        emit("roofline.skip", 0.0, "no dryrun artifact")
+        return
+    rows = analyze()
+    for r in rows:
+        if r["mesh"] == "pod1":
+            emit(f"roofline.{r['arch']}.{r['shape']}", 0.0,
+                 f"compute={r['t_compute_s']:.2e};memory={r['t_memory_s']:.2e};"
+                 f"collective={r['t_collective_s']:.2e};dom={r['dominant']};"
+                 f"useful={r['useful_ratio']:.2f};frac={r['roofline_frac']:.2f}")
+
+
+if __name__ == "__main__":
+    rows = analyze()
+    print(render_markdown(rows))

@@ -1,0 +1,72 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module for what the
+derived field packs). ``--quick`` trims sweeps for CI-ish runs.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig2,fig4,fig8,fig9,fig11,fig12,"
+                         "table2,roofline")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import fig1, fig2, fig4, fig8, fig11, fig12, roofline, table2
+    from .common import emit
+
+    n_req = 150 if args.quick else 250
+    jobs = []
+    if not only or "fig1" in only:
+        jobs.append(("fig1", lambda: fig1.run("chatbot-small")))
+    if not only or "fig2" in only:
+        jobs.append(("fig2", lambda: fig2.run("chatbot-small")))
+    if not only or "fig4" in only:
+        jobs.append(("fig4", lambda: fig4.run("chatbot-large")))
+    if not only or "fig8" in only:
+        jobs.append(("fig8.chatbot-small",
+                     lambda: fig8.run("chatbot-small", n_requests=n_req)))
+        if not args.quick:
+            jobs.append(("fig8.chatbot-large",
+                         lambda: fig8.run("chatbot-large", n_requests=n_req)))
+            jobs.append(("fig8.moe",
+                         lambda: fig8.run("moe-chatbot", n_requests=n_req)))
+    if not only or "fig9" in only:
+        jobs.append(("fig9.code",
+                     lambda: fig8.run("code", n_requests=n_req)))
+        jobs.append(("fig9.summarization",
+                     lambda: fig8.run("summarization", n_requests=n_req)))
+    if not only or "fig11" in only:
+        jobs.append(("fig11", lambda: fig11.run("chatbot-small",
+                                                n_requests=n_req)))
+    if not only or "fig12" in only:
+        jobs.append(("fig12", lambda: fig12.run()))
+    if not only or "table2" in only:
+        jobs.append(("table2", lambda: table2.run()))
+    if not only or "roofline" in only:
+        jobs.append(("roofline", roofline.run))
+
+    t_all = time.time()
+    failures = 0
+    for name, job in jobs:
+        t0 = time.time()
+        try:
+            job()
+            emit(f"{name}.done", (time.time() - t0) * 1e6, "ok")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            emit(f"{name}.done", (time.time() - t0) * 1e6, "FAILED")
+    emit("benchmarks.total", (time.time() - t_all) * 1e6,
+         f"jobs={len(jobs)};failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,39 @@
+"""Placement search walkthrough (paper §4): run Algorithm 1 and Algorithm 2
+for each application workload, print the chosen parallelism per phase and
+the resulting per-chip goodput — the paper's Appendix B table analogue.
+
+    PYTHONPATH=src python examples/placement_search.py [--apps chatbot-small]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+from benchmarks.common import APPS, app_setup  # noqa: E402
+from repro.core.placement import (algo1_high_affinity,  # noqa: E402
+                                  algo2_low_affinity, vllm_pp_search)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--apps", default="chatbot-small,code")
+    ap.add_argument("--n-requests", type=int, default=150)
+    args = ap.parse_args()
+    for app in args.apps.split(","):
+        cfg, lm, spec, ref = app_setup(app)
+        print(f"=== {app} ({cfg.name}), SLO ttft={spec.slo_ttft * 1e3:.0f}ms "
+              f"tpot={spec.slo_tpot * 1e3:.1f}ms")
+        p1 = algo1_high_affinity(lm, spec, rate=8.0, n_node=2, m_per_node=8,
+                                 n_requests=args.n_requests)
+        print("  Alg1 (high affinity):", p1.summary())
+        p2 = algo2_low_affinity(lm, spec, rate=8.0, n_node=2, m_per_node=8,
+                                n_requests=args.n_requests)
+        print("  Alg2 (low affinity): ", p2.summary())
+        par, g = vllm_pp_search(lm, spec, rate=8.0, n_node=2, m_per_node=8,
+                                n_requests=args.n_requests)
+        print(f"  vLLM++ best colocated: tp={par.tp} pp={par.pp} "
+              f"goodput/chip={g:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Train a ~100M-scale model for a few hundred steps on CPU with
+checkpoint/restart (kill it mid-run and re-invoke: it resumes).
+
+    PYTHONPATH=src python examples/train_small.py --steps 300
+"""
+import argparse
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="gemma3-1b-smoke")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_small")
+    args = ap.parse_args()
+    losses = run(args.arch, args.steps, args.batch, args.seq,
+                 args.ckpt_dir, ckpt_every=50, lr=1e-3, log_every=10)
+    print(f"first-10 mean loss {sum(losses[:10]) / 10:.3f} -> "
+          f"last-10 mean loss {sum(losses[-10:]) / 10:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Assigned architecture config (see archs.py for the literal)."""
+from .archs import MAMBA2_2P7B as CONFIG
+from .archs import smoke
+
+SMOKE = smoke(CONFIG)

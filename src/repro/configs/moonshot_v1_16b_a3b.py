@@ -1,0 +1,5 @@
+"""Assigned architecture config (see archs.py for the literal)."""
+from .archs import MOONSHOT_16B_A3B as CONFIG
+from .archs import smoke
+
+SMOKE = smoke(CONFIG)

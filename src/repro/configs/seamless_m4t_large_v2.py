@@ -1,0 +1,5 @@
+"""Assigned architecture config (see archs.py for the literal)."""
+from .archs import SEAMLESS_M4T_V2 as CONFIG
+from .archs import smoke
+
+SMOKE = smoke(CONFIG)

@@ -1,0 +1,74 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation — these feed jit(...).lower() in the dry-run and the
+shardings resolver. Modality frontends are stubs: VLM cells get patch
+embeddings, audio cells get frame embeddings, per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ShapeConfig
+from ..models.api import build_model
+
+# seamless decode cells: fixed encoder context length
+ENCDEC_SRC_LEN = 4096
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if cfg.family == "encdec":
+        T = S // 2
+        return {
+            "src_embeds": jax.ShapeDtypeStruct((B, T, cfg.d_model), bf16),
+            "tokens": jax.ShapeDtypeStruct((B, S - T), i32),
+            "targets": jax.ShapeDtypeStruct((B, S - T), i32),
+        }
+    P = cfg.frontend_tokens
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+        "targets": jax.ShapeDtypeStruct((B, S), i32),
+    }
+    if P:
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model), bf16)
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if cfg.family == "encdec":
+        return {
+            "src_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16),
+            "tokens": jax.ShapeDtypeStruct((B, 8), i32),  # primer prefix
+        }
+    P = cfg.frontend_tokens
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S - P), i32)}
+    if P:
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model), bf16)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Any, Any]:
+    """Returns (cache_specs, token_specs) for one decode step at kv=seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    kw = {"src_len": ENCDEC_SRC_LEN} if cfg.family == "encdec" else {}
+    cache = model.cache_specs(B, S, jnp.bfloat16, **kw)
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return cache, tokens
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    if shape.kind == "train":
+        return {"batch": train_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_specs(cfg, shape)}
+    cache, tokens = decode_specs(cfg, shape)
+    return {"cache": cache, "tokens": tokens}

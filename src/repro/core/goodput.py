@@ -1,0 +1,74 @@
+"""Goodput = max request rate served within SLOs at the attainment target,
+per chip provisioned (the paper's objective)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+from .simulator import SimResult, summarize
+from .workload import WorkloadSpec, sample_requests
+
+
+@dataclasses.dataclass
+class GoodputResult:
+    rate: float                 # max sustainable total rate (req/s)
+    per_chip: float             # rate / chips
+    attain_at_rate: float
+    chips: int
+
+
+def attainment_at_rate(run_sim: Callable, spec: WorkloadSpec, rate: float,
+                       n_requests: int = 400, seed: int = 0,
+                       slo_scale: float = 1.0, min_duration_s: float = 45.0,
+                       max_requests: int = 4000) -> SimResult:
+    """Sample enough traffic to reach steady state at this rate: at least
+    `min_duration_s` of arrivals (capped), measured past a warmup window."""
+    n = int(min(max(n_requests, rate * min_duration_s), max_requests))
+    reqs = sample_requests(spec, rate, n, seed=seed)
+    reqs, extras = run_sim(reqs)
+    return summarize(reqs, spec, slo_scale=slo_scale, extra=extras)
+
+
+def max_goodput(run_sim: Callable, spec: WorkloadSpec, chips: int, *,
+                target: float = 0.9, n_requests: int = 400, seed: int = 0,
+                slo_scale: float = 1.0, lo: float = 0.05, hi: float = 512.0,
+                iters: int = 12) -> GoodputResult:
+    """Binary search the max rate with attainment >= target (paper §4.1)."""
+    def attain(rate: float) -> float:
+        return attainment_at_rate(run_sim, spec, rate, n_requests, seed,
+                                  slo_scale).attain
+
+    if attain(lo) < target:
+        return GoodputResult(0.0, 0.0, attain(lo), chips)
+    if attain(hi) >= target:   # saturates the search cap
+        return GoodputResult(hi, hi / chips, target, chips)
+    best = lo
+    for _ in range(iters):
+        mid = (lo + hi) / 2
+        if attain(mid) >= target:
+            best, lo = mid, mid
+        else:
+            hi = mid
+        if hi - lo < 0.02 * max(lo, 0.1):
+            break
+    return GoodputResult(best, best / chips, attain(best), chips)
+
+
+def min_slo_scale(run_sim: Callable, spec: WorkloadSpec, rate: float, *,
+                  target: float = 0.9, n_requests: int = 400, seed: int = 0,
+                  lo: float = 0.05, hi: float = 8.0, iters: int = 12) -> float:
+    """Most stringent SLO scale sustainable at a fixed rate (Fig. 8 row 2)."""
+    def ok(scale: float) -> bool:
+        return attainment_at_rate(run_sim, spec, rate, n_requests, seed,
+                                  scale).attain >= target
+
+    if not ok(hi):
+        return float("inf")
+    best = hi
+    for _ in range(iters):
+        mid = (lo + hi) / 2
+        if ok(mid):
+            best, hi = mid, mid
+        else:
+            lo = mid
+    return best

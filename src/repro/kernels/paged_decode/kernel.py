@@ -1,0 +1,122 @@
+"""Pallas TPU paged decode-attention kernel (PagedAttention, TPU-native).
+
+One new token per sequence attends to a paged KV cache. The block table
+rides in scalar-prefetch (SMEM) so the k/v BlockSpec index_map can chase
+page indirections while the pipeline prefetches the next page HBM->VMEM —
+the TPU analogue of vLLM's per-CTA page walk. Pages are the innermost
+sequential grid axis; the flash-decoding running (m, l, acc) state lives in
+VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page_size: int, groups: int,
+            scale: float, softcap: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = lens_ref[b]
+    base = p * page_size
+
+    @pl.when(base < seq_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                # (H, hd)
+        k = k_ref[0].astype(jnp.float32)                # (page, Hkv, hd)
+        v = v_ref[0].astype(jnp.float32)
+        H, hd = q.shape
+        Hkv = k.shape[1]
+        valid = (base + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+                 ) < seq_len                            # (1, page)
+
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        s_rows = []
+        for kv in range(Hkv):
+            qg = jax.lax.dynamic_slice_in_dim(q, kv * groups, groups, 0)
+            s_kv = jax.lax.dot_general(qg, k[:, kv],
+                                       (((1,), (1,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+            s_rows.append(s_kv * scale)                 # (G, page)
+        s = jnp.concatenate(s_rows, axis=0)             # (H, page)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        pexp = jnp.exp(s - m_new[:, None])              # (H, page)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(pexp, axis=1)
+        pv_rows = []
+        for kv in range(Hkv):
+            pg = jax.lax.dynamic_slice_in_dim(pexp, kv * groups, groups, 0)
+            pv_kv = jax.lax.dot_general(pg, v[:, kv],
+                                        (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+            pv_rows.append(pv_kv)                       # (G, hd)
+        pv = jnp.concatenate(pv_rows, axis=0)           # (H, hd)
+        acc_ref[...] = acc_prev * corr[:, None] + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(p == np_ - 1)
+    def _fin():
+        den = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0] = (acc_ref[...] / den[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode(q, k_pages, v_pages, block_table, lens, *,
+                 scale=None, softcap: float = 0.0, interpret: bool = False):
+    """q: (B, H, hd); k/v_pages: (num_pages, page, Hkv, hd);
+    block_table: (B, pages_per_seq) i32; lens: (B,) i32 -> (B, H, hd)."""
+    B, H, hd = q.shape
+    num_pages, page_size, Hkv, _ = k_pages.shape
+    pages_per_seq = block_table.shape[1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    grid = (B, pages_per_seq)
+    kv_spec = pl.BlockSpec(
+        (1, page_size, Hkv, hd),
+        lambda b, p, table, lens: (table[b, p], 0, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_kernel, page_size=page_size, groups=G,
+                          scale=scale, softcap=softcap),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, hd), lambda b, p, table, lens: (b, 0, 0)),
+                kv_spec, kv_spec,
+            ],
+            out_specs=pl.BlockSpec((1, H, hd),
+                                   lambda b, p, table, lens: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H,), jnp.float32),
+                pltpu.VMEM((H,), jnp.float32),
+                pltpu.VMEM((H, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(block_table, lens, q, k_pages, v_pages)
+    return out

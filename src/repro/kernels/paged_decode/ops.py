@@ -1,0 +1,25 @@
+"""Jitted wrapper for paged decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import paged_decode
+from .ref import paged_decode_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("softcap", "impl"))
+def paged_decode_op(q, k_pages, v_pages, block_table, lens, *,
+                    softcap: float = 0.0, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return paged_decode_ref(q, k_pages, v_pages, block_table, lens,
+                                softcap=softcap)
+    return paged_decode(q, k_pages, v_pages, block_table, lens,
+                        softcap=softcap, interpret=(impl == "interpret"))

@@ -1,0 +1,23 @@
+"""Jitted wrapper for the SSD scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import ssd_scan
+from .ref import ssd_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_scan_op(x, dt, A, B, C, D, *, chunk: int = 128, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ssd_scan_ref(x, dt, A, B, C, D, chunk=chunk)
+    return ssd_scan(x, dt, A, B, C, D, chunk=chunk,
+                    interpret=(impl == "interpret"))

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the SSD scan kernel — delegates to the model-side
+chunked implementation (itself validated against the sequential
+recurrence in tests)."""
+from __future__ import annotations
+
+from ...models.ssd import ssd_chunked, ssd_reference
+
+
+def ssd_scan_ref(x, dt, A, B, C, D, *, chunk: int = 128):
+    return ssd_chunked(x, dt, A, B, C, D, chunk)
+
+
+def ssd_scan_sequential(x, dt, A, B, C, D):
+    return ssd_reference(x, dt, A, B, C, D)

@@ -1,0 +1,219 @@
+"""Trip-count-aware cost analysis.
+
+XLA's HloCostAnalysis counts a while/scan body ONCE, so for scan-over-layers
+programs `compiled.cost_analysis()` under-reports FLOPs/bytes by the trip
+count, and the same for collectives that live inside the loop body. Two
+correctors:
+
+  * `jaxpr_costs(fn, *args)` — walks the closed jaxpr, counting dot FLOPs
+    exactly and structural memory traffic (dot/gather/scatter/slice operands
+    + outputs; elementwise assumed fused), multiplying scan bodies by their
+    trip counts. These are GLOBAL (pre-SPMD) numbers.
+  * `collectives_with_trips(hlo_text)` — the per-device HLO parse from
+    dryrun, with each collective weighted by the product of trip counts of
+    the while loops enclosing its computation.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001
+        return 0
+
+
+def _dot_flops(eqn) -> int:
+    d = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = d
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = math.prod(lhs.shape[i] for i in lb) if lb else 1
+    contract = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    lhs_free = math.prod(lhs.shape[i] for i in range(len(lhs.shape))
+                         if i not in lc and i not in lb)
+    rhs_free = math.prod(rhs.shape[i] for i in range(len(rhs.shape))
+                         if i not in rc and i not in rb)
+    return 2 * batch * contract * lhs_free * rhs_free
+
+
+def _mem_bytes(eqn) -> int:
+    """HBM-traffic model per primitive: reads/writes actually touched, not
+    full operand sizes (a dynamic_slice of a huge array only reads the
+    slice; a scatter only writes the updates)."""
+    name = eqn.primitive.name
+    out_b = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+    in_b = sum(_aval_bytes(v.aval) for v in eqn.invars)
+    if name in ("dynamic_slice", "gather", "take", "transpose"):
+        return 2 * out_b                       # read slice + write out
+    if name in ("dynamic_update_slice",):
+        upd = _aval_bytes(eqn.invars[1].aval)
+        return 2 * upd                         # read update + write window
+    if name.startswith("scatter"):
+        upd = _aval_bytes(eqn.invars[-1].aval)
+        return 2 * upd
+    if name in ("reduce_sum", "reduce_max", "reduce_min", "reduce_and",
+                "reduce_or", "argmax", "argmin", "cumsum", "cumlogsumexp"):
+        return in_b + out_b
+    if name in ("concatenate", "sort", "conv_general_dilated"):
+        return in_b + out_b
+    return 0
+
+
+_MEM_PRIMS = {
+    "dot_general", "gather", "scatter", "scatter-add", "scatter_add",
+    "dynamic_slice", "dynamic_update_slice", "concatenate",
+    "conv_general_dilated", "reduce_sum", "reduce_max", "reduce_min",
+    "cumsum", "cumlogsumexp", "sort", "take", "transpose", "argmax",
+    "argmin",
+}
+
+
+def _walk(jaxpr, mult: float, acc: Dict[str, float]):
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            acc["flops"] += mult * _dot_flops(eqn)
+            io = (sum(_aval_bytes(v.aval) for v in eqn.invars)
+                  + sum(_aval_bytes(v.aval) for v in eqn.outvars))
+            acc["bytes"] += mult * io
+        elif name == "scan":
+            trips = eqn.params["length"]
+            inner = eqn.params["jaxpr"].jaxpr
+            # carry+xs read and ys written each trip
+            io = (sum(_aval_bytes(v.aval) for v in eqn.invars)
+                  + sum(_aval_bytes(v.aval) for v in eqn.outvars))
+            acc["bytes"] += mult * io  # xs/ys are consumed once in total
+            _walk(inner, mult * trips, acc)
+        elif name == "shard_map":
+            # body runs once per manual shard with LOCAL shapes; scale back
+            # to global totals
+            m = eqn.params["mesh"]
+            shards = 1
+            for a in eqn.params["manual_axes"]:
+                shards *= dict(m.shape)[a]
+            _walk(eqn.params["jaxpr"], mult * shards, acc)
+        elif name == "cond":
+            for br in eqn.params["branches"]:
+                _walk(br.jaxpr if hasattr(br, "jaxpr") else br, mult, acc)
+                break  # first branch as representative
+        else:
+            descended = False
+            for v in eqn.params.values():
+                if isinstance(v, jcore.ClosedJaxpr):
+                    _walk(v.jaxpr, mult, acc)
+                    descended = True
+                elif isinstance(v, jcore.Jaxpr):
+                    _walk(v, mult, acc)
+                    descended = True
+            if not descended and name in _MEM_PRIMS:
+                acc["bytes"] += mult * _mem_bytes(eqn)
+    return acc
+
+
+def jaxpr_costs(fn, *args, **kw) -> Dict[str, float]:
+    closed = jax.make_jaxpr(fn)(*args, **kw)
+    acc = {"flops": 0.0, "bytes": 0.0}
+    _walk(closed.jaxpr, 1.0, acc)
+    # argument reads count once (params, caches)
+    acc["arg_bytes"] = float(sum(_aval_bytes(v.aval)
+                                 for v in closed.jaxpr.invars))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# HLO while-loop trip-count multipliers for collectives
+# ---------------------------------------------------------------------------
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"=\s*(?:\()?[^=\n]*while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*"
+    r"body=%?([\w\.\-]+)([^\n]*)")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n":\s*"(\d+)"')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    comps: Dict[str, str] = {}
+    name, buf = None, []
+    for ln in hlo.splitlines():
+        if name is None:
+            m = _COMP_HDR.match(ln)
+            if m and ln.rstrip().endswith("{"):
+                name = m.group(2)
+                buf = [ln]
+        else:
+            buf.append(ln)
+            if ln.startswith("}"):
+                comps[name] = "\n".join(buf)
+                name, buf = None, []
+    if name is not None:
+        comps[name] = "\n".join(buf)
+    return comps
+
+
+def _trip_count(while_line_rest: str, cond_body: str) -> int:
+    m = _TRIP_RE.search(while_line_rest)
+    if m:
+        return int(m.group(1))
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(hlo: str) -> Dict[str, float]:
+    """Product of enclosing while trip counts per computation name."""
+    comps = split_computations(hlo)
+    # map body computation -> (caller computation, trip)
+    called_by: Dict[str, Tuple[str, int]] = {}
+    for cname, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody, rest = m.group(1), m.group(2), m.group(3)
+            trip = _trip_count(rest or "", comps.get(cond, ""))
+            called_by[wbody] = (cname, trip)
+            called_by[cond] = (cname, trip)
+        # plain calls / fusions inherit multiplier
+        for m in re.finditer(r"(?:calls|to_apply|fusion)=%?([\w\.\-_]+)", body):
+            called_by.setdefault(m.group(1), (cname, 1))
+
+    mult: Dict[str, float] = {}
+
+    def resolve(c: str, depth=0) -> float:
+        if c in mult:
+            return mult[c]
+        if depth > 50 or c not in called_by:
+            mult[c] = 1.0
+            return 1.0
+        caller, trip = called_by[c]
+        m = resolve(caller, depth + 1) * trip
+        mult[c] = m
+        return m
+
+    for c in comps:
+        resolve(c)
+    return mult
+
+
+def collectives_with_trips(hlo: str, parse_fn, n_pod_boundary: int = 256
+                           ) -> Dict[str, Any]:
+    """Re-run the dryrun collective parse per computation, weighted by the
+    enclosing while trip product."""
+    comps = split_computations(hlo)
+    mults = computation_multipliers(hlo)
+    total = {"ici_bytes": 0.0, "dcn_bytes": 0.0, "by_kind": {}, "n_ops": 0}
+    for cname, body in comps.items():
+        sub = parse_fn(body, n_pod_boundary)
+        m = mults.get(cname, 1.0)
+        total["ici_bytes"] += sub["ici_bytes"] * m
+        total["dcn_bytes"] += sub["dcn_bytes"] * m
+        total["n_ops"] += sub["n_ops"]
+        for k, v in sub["by_kind"].items():
+            total["by_kind"][k] = total["by_kind"].get(k, 0.0) + v * m
+    return total

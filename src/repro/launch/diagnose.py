@@ -1,0 +1,75 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Dump the largest trip-weighted collectives of a cell with their source
+op names (hillclimb profiling aid).
+
+  PYTHONPATH=src python -m repro.launch.diagnose --arch gemma3-1b \
+      --shape decode_32k [--opt ...] [--top 15]
+"""
+import argparse
+import re
+
+from .costs import computation_multipliers, split_computations
+from .dryrun import DTYPE_BYTES, lower_cell
+
+_OP_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_NAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default=None)
+    ap.add_argument("--opt", default="")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    opts = tuple(o for o in args.opt.split(",") if o)
+    import repro.launch.dryrun as dr
+    hlo_box = {}
+    orig = dr.parse_collectives
+
+    # capture the HLO text by hooking lower_cell's parse call
+    def hook(hlo, n_pod_boundary=256):
+        hlo_box.setdefault("text", hlo)
+        return orig(hlo, n_pod_boundary)
+    dr.parse_collectives = hook
+    rec = dr.lower_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                        mode=args.mode, opts=opts)
+    dr.parse_collectives = orig
+    hlo = hlo_box["text"]
+
+    comps = split_computations(hlo)
+    mults = computation_multipliers(hlo)
+    rows = []
+    for cname, body in comps.items():
+        m = mults.get(cname, 1.0)
+        for mm in _OP_RE.finditer(body):
+            dt, dims, kind = mm.group(1), mm.group(2), mm.group(3)
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes = n * DTYPE_BYTES[dt]
+            line_end = body.find("\n", mm.end())
+            line = body[mm.start():line_end]
+            nm = _NAME_RE.search(line)
+            rows.append((nbytes * m, kind, dt, dims, m,
+                         (nm.group(1) if nm else "?")[:140]))
+    rows.sort(reverse=True)
+    print(f"status={rec['status']} total_coll_ici="
+          f"{rec['collectives_corrected']['ici_bytes']/1e9:.1f}GB")
+    for b, kind, dt, dims, m, name in rows[:args.top]:
+        print(f"{b/1e9:9.2f}GB x{m:5.0f} {kind:18s} {dt}[{dims}] :: {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state. Single pod: 16x16 = 256 chips (v5e pod). Multi-pod: 2 pods x 256.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many real devices exist (tests)."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

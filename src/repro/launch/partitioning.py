@@ -1,0 +1,120 @@
+"""Logical-axis -> mesh-axis rule sets + pytree sharding resolution.
+
+Three modes:
+  train      — FSDP("data") x TP("model"); batch over ("pod","data").
+  serve      — TP("model") only; weights replicated over "data"; batch over
+               ("pod","data") = replica rows.
+  serve_2d   — as serve, plus weights 2D-sharded with d_model over "data"
+               (for archs whose weights exceed HBM/16: mixtral, internvl2).
+
+Every rule is a candidate LIST; the resolver (common.ShardingRules) picks
+the first axis whose size divides the tensor dim and isn't already used in
+the same spec — small archs (gemma3's 4 heads) degrade to replication
+per-tensor instead of failing.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.common import ShardingRules
+
+# archs that need 2D weight sharding to fit 16 GB/chip in serving
+SERVE_2D_ARCHS = ("mixtral-8x22b", "internvl2-76b")
+
+
+def _with_pod(mesh, *axes):
+    """Prefix ("pod", ...) when a pod axis exists."""
+    if "pod" in mesh.shape:
+        return (("pod",) + axes,) if axes else ("pod",)
+    return (axes,) if axes else ()
+
+
+def make_rules(mesh, mode: str, opts=()) -> ShardingRules:
+    has_pod = "pod" in mesh.shape
+    batch_c = [("pod", "data") if has_pod else "data", "data", None]
+    if mode == "train":
+        rules = {
+            # activations
+            "batch": batch_c,
+            "embed_act": [None],
+            "heads": ["model", None],
+            "kv_heads": ["model", None],
+            "vocab": ["model", None],
+            "kv_seq": [None],
+            # params: FSDP on data, TP on model
+            "embed": [("pod", "data") if has_pod else "data", "data", None],
+            "kv_embed": [("pod", "data") if has_pod else "data", "data", None],
+            "kv_batch": batch_c,
+            "mlp": ["model", None],
+            "expert": ["model", None],
+            "ssm_inner": ["model", None],
+            "state": [None],
+            "layers": [None], "groups": [None],
+        }
+    elif mode in ("serve", "serve_2d"):
+        # decode_weight_stationary: replicate the (tiny) decode activations
+        # instead of sharding their batch, so 2D-sharded weights stay put
+        # and each matmul reduces small partials — kills the per-step
+        # per-layer weight all-gathers of serve_2d (beyond-paper).
+        act_batch = [None] if "decode_weight_stationary" in opts else batch_c
+        rules = {
+            "batch": act_batch,
+            "kv_batch": batch_c,
+            "embed_act": [None],
+            "heads": ["model", None],
+            "kv_heads": ["model", None],
+            "vocab": ["model", None],
+            # KV sequence parallelism (beyond-paper, default-on): falls to
+            # the data axis for B=1 long-context cells, and to the model
+            # axis for small-kv-head archs whose cache would otherwise
+            # replicate across it (flash-decoding-style partial softmax).
+            # --opt kv_seq_data_only restores the paper-faithful baseline.
+            "kv_seq": (["data", None] if "kv_seq_data_only" in opts
+                       else ["data", "model", None]),
+            "embed": (["data", None] if mode == "serve_2d" else [None]),
+            # KV projections of small-kv-head archs would replicate on the
+            # model axis; shard their input dim on data instead
+            "kv_embed": ["data", None],
+            # 2D ff sharding (TP=256 for the FFN): the only way mixtral's
+            # 282 GB of expert weights fit at decode without per-step weight
+            # gathers; psum of tiny decode activations is the cost
+            "mlp": [("data", "model"), "model", None],
+            "expert": ["model", None],
+            "ssm_inner": ["model", None],
+            "state": [None],
+            "layers": [None], "groups": [None],
+        }
+    else:
+        raise ValueError(mode)
+    out = ShardingRules(mesh, rules)
+    for o in opts:
+        setattr(out, o, True)
+    return out
+
+
+def tree_shardings(rules: ShardingRules, shapes_tree, axes_tree):
+    """NamedShardings for a pytree given ShapeDtypeStructs + logical axes."""
+
+    def one(shape_struct, axes):
+        spec = rules.resolve(axes, shape_struct.shape)
+        return NamedSharding(rules.mesh, spec)
+
+    return jax.tree.map(one, shapes_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# logical axes for step inputs --------------------------------------------
+
+def batch_logical_axes(cfg, kind: str) -> Dict[str, Any]:
+    if kind == "train":
+        ax = {"tokens": ("batch", None), "targets": ("batch", None)}
+    else:
+        ax = {"tokens": ("batch", None)}
+    if cfg.family == "encdec":
+        ax["src_embeds"] = ("batch", None, "embed_act")
+    if cfg.frontend_tokens:
+        ax["frontend_embeds"] = ("batch", None, "embed_act")
+    return ax

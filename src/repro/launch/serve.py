@@ -1,0 +1,71 @@
+"""Serving launcher.
+
+Production path (TPU): run the placement search for the target arch +
+workload, then instantiate the disaggregated cluster with the chosen
+parallelism per phase. On this CPU host the same entrypoint drives the
+smoke-scale live cluster; the full-scale engine programs are validated via
+`repro.launch.dryrun` (lower+compile on the production mesh).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+        --workload sharegpt --rate 8 [--live]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from ..configs import get_config
+from ..core import hw
+from ..core.latency_model import LatencyModel
+from ..core.placement import algo1_high_affinity, algo2_low_affinity
+from ..core.workload import WORKLOADS, Request, derive_slos, sample_requests
+from ..models.api import build_model
+from ..serving.cluster import DisaggCluster
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--workload", default="sharegpt",
+                    choices=list(WORKLOADS))
+    ap.add_argument("--rate", type=float, default=8.0)
+    ap.add_argument("--algo", default="low", choices=["low", "high"])
+    ap.add_argument("--n-node", type=int, default=2)
+    ap.add_argument("--m-per-node", type=int, default=8)
+    ap.add_argument("--n-requests", type=int, default=200)
+    ap.add_argument("--live", action="store_true",
+                    help="also serve a trace on the smoke-scale live cluster")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    lm = LatencyModel(cfg, hw.V5E)
+    spec = derive_slos(WORKLOADS[args.workload], lm)
+    search = algo2_low_affinity if args.algo == "low" else algo1_high_affinity
+    placement = search(lm, spec, rate=args.rate, n_node=args.n_node,
+                       m_per_node=args.m_per_node,
+                       n_requests=args.n_requests)
+    print(json.dumps(placement.summary(), indent=1))
+
+    if args.live:
+        smoke = get_config(args.arch + "-smoke")
+        params = build_model(smoke).init(jax.random.PRNGKey(0))
+        cluster = DisaggCluster(
+            smoke, params,
+            n_prefill=min(placement.n_prefill, 2),
+            n_decode=min(placement.n_decode, 2),
+            max_batch=4, max_len=96, lm_tokens=64)
+        trace = [Request(r.rid, r.arrive, min(r.in_len, 48),
+                         min(r.out_len, 8))
+                 for r in sample_requests(spec, 20.0, 12, seed=0)]
+        res = cluster.run(trace)
+        ttfts = sorted(r.ttft for r in res.values())
+        print(f"[live] served {len(res)} requests; "
+              f"median ttft {ttfts[len(ttfts) // 2] * 1e3:.0f} ms; "
+              f"KV migrated {cluster.tx.total_bytes / 1e6:.1f} MB")
+
+
+if __name__ == "__main__":
+    main()

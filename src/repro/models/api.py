@@ -1,0 +1,93 @@
+"""Unified model facade: one interface per family for engines/launchers.
+
+batch dicts:
+  LM families:  {"tokens": (B, S) i32 [, "frontend_embeds": (B, P, d)]}
+  encdec:       {"src_embeds": (B, T, d), "tokens": (B, S) i32}
+decode tokens: (B,) i32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, mamba_lm, transformer
+from .common import Box, split_boxes
+
+
+def _mod(cfg):
+    return {
+        "dense": transformer, "moe": transformer, "vlm": transformer,
+        "ssm": mamba_lm, "hybrid": hybrid, "encdec": encdec,
+    }[cfg.family]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: Any
+
+    # ---- params ----------------------------------------------------
+    def init(self, key):
+        params, _ = split_boxes(_mod(self.cfg).init(key, self.cfg))
+        return params
+
+    def init_with_axes(self, key):
+        return split_boxes(_mod(self.cfg).init(key, self.cfg))
+
+    def param_axes(self):
+        """Logical-axes pytree without allocating (eval_shape the init)."""
+        axes = {}
+
+        def runner(key):
+            nonlocal axes
+            params, axes_ = split_boxes(_mod(self.cfg).init(key, self.cfg))
+            axes = axes_
+            return params
+
+        shapes = jax.eval_shape(runner, jax.random.PRNGKey(0))
+        return shapes, axes
+
+    def cast(self, params, dtype):
+        return jax.tree.map(
+            lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            params)
+
+    # ---- compute ----------------------------------------------------
+    def _fe(self, batch):
+        return batch.get("frontend_embeds")
+
+    def forward(self, params, batch, *, remat=False, attn_blocks=(512, 512)):
+        """Full-sequence logits (training). Returns (logits, aux)."""
+        m = _mod(self.cfg)
+        if self.cfg.family == "encdec":
+            logits, _, aux = m.forward(params, batch, self.cfg, remat=remat,
+                                       attn_blocks=attn_blocks)
+        else:
+            logits, _, aux = m.forward(params, batch["tokens"], self.cfg,
+                                       remat=remat, attn_blocks=attn_blocks,
+                                       frontend_embeds=self._fe(batch))
+        return logits, aux
+
+    def prefill(self, params, batch, *, max_len: int, attn_blocks=(512, 512)):
+        m = _mod(self.cfg)
+        if self.cfg.family == "encdec":
+            return m.prefill(params, batch, self.cfg, max_len=max_len,
+                             attn_blocks=attn_blocks)
+        return m.prefill(params, batch["tokens"], self.cfg, max_len=max_len,
+                         attn_blocks=attn_blocks, frontend_embeds=self._fe(batch))
+
+    def decode_step(self, params, cache, tokens):
+        return _mod(self.cfg).decode_step(params, cache, tokens, self.cfg)
+
+    # ---- specs -------------------------------------------------------
+    def cache_specs(self, batch: int, max_len: int, dtype=jnp.bfloat16, **kw):
+        return _mod(self.cfg).cache_specs(self.cfg, batch, max_len, dtype, **kw)
+
+    def cache_logical_axes(self):
+        return _mod(self.cfg).cache_logical_axes(self.cfg)
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

@@ -1,0 +1,183 @@
+"""Attention implementations.
+
+`flash_reference` is the pure-jnp oracle of the Pallas flash kernel: a
+lax.scan over a *static* list of (q_block, kv_block) tiles (only tiles
+intersecting the causal/sliding-window band are visited, so HLO FLOPs track
+the kernel's), with online-softmax accumulation. It is what the multi-pod
+dry-run lowers, because Pallas TPU kernels cannot lower on the CPU
+placeholder backend.
+
+`decode_attend` is the single-new-token path against a (possibly ring) KV
+cache.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import shard
+
+NEG_INF = -2.3819763e38  # jnp.finfo(f32).min-ish, matches flash kernels
+
+
+def _band_tiles(n_q: int, n_kv: int, block_q: int, block_kv: int,
+                causal: bool, window: int) -> list[Tuple[int, int]]:
+    """Static tile schedule: tiles (i, j) intersecting the attention band."""
+    tiles = []
+    for i in range(n_q):
+        q_lo, q_hi = i * block_q, (i + 1) * block_q - 1
+        for j in range(n_kv):
+            k_lo, k_hi = j * block_kv, (j + 1) * block_kv - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window and k_hi < q_lo - window + 1:
+                continue
+            tiles.append((i, j))
+    return tiles
+
+
+def flash_reference(q, k, v, *, causal=True, window: int = 0,
+                    block_q: int = 512, block_kv: int = 512,
+                    scale: Optional[float] = None,
+                    logit_softcap: float = 0.0):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd). GQA by head-group repeat.
+
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert H % Hkv == 0
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    # pad to block multiples (static)
+    pq = (-Sq) % block_q
+    pkv = (-Skv) % block_kv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    Sqp, Skvp = Sq + pq, Skv + pkv
+    n_q, n_kv = Sqp // block_q, Skvp // block_kv
+
+    tiles = _band_tiles(n_q, n_kv, block_q, block_kv, causal and Sq == Skv, window)
+    tile_arr = jnp.asarray(np.array(tiles, dtype=np.int32))  # (T, 2)
+
+    # accumulators in f32
+    acc = jnp.zeros((B, Sqp, H, hd), jnp.float32)
+    m = jnp.full((B, Sqp, H), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, Sqp, H), jnp.float32)
+
+    q_idx = jnp.arange(block_q)
+    kv_idx = jnp.arange(block_kv)
+
+    def body(carry, tile):
+        acc, m, l = carry
+        ti, tj = tile[0], tile[1]
+        qs = jax.lax.dynamic_slice_in_dim(q, ti * block_q, block_q, axis=1)
+        ks = jax.lax.dynamic_slice_in_dim(k, tj * block_kv, block_kv, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, tj * block_kv, block_kv, axis=1)
+        # (B, bq, H, hd) x (B, bkv, Hkv, hd) -> (B, H, bq, bkv)
+        qs4 = qs.reshape(B, block_q, Hkv, G, hd)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qs4.astype(jnp.float32),
+                       ks.astype(jnp.float32)) * scale
+        if logit_softcap:
+            s = jnp.tanh(s / logit_softcap) * logit_softcap
+        # mask within tile
+        qpos = ti * block_q + q_idx            # (bq,)
+        kpos = tj * block_kv + kv_idx          # (bkv,)
+        mask = kpos[None, :] <= Skv - Sq + qpos[:, None] if (causal and True) else jnp.ones((block_q, block_kv), bool)
+        if not causal:
+            mask = jnp.ones((block_q, block_kv), bool)
+        if window:
+            mask = mask & (kpos[None, :] > Skv - Sq + qpos[:, None] - window)
+        mask = mask & (kpos[None, :] < Skv)    # kv padding
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+
+        # reshape helpers: s is (B, Hkv, G, bq, bkv)
+        s_max = s.max(axis=-1)                                   # (B,Hkv,G,bq)
+        s_max = jnp.moveaxis(s_max, 3, 1).reshape(B, block_q, H)  # (B,bq,H)
+        m_blk = jax.lax.dynamic_slice_in_dim(m, ti * block_q, block_q, 1)
+        l_blk = jax.lax.dynamic_slice_in_dim(l, ti * block_q, block_q, 1)
+        a_blk = jax.lax.dynamic_slice_in_dim(acc, ti * block_q, block_q, 1)
+        m_new = jnp.maximum(m_blk, s_max)
+        # p: (B,Hkv,G,bq,bkv)
+        m_for_s = jnp.moveaxis(m_new.reshape(B, block_q, Hkv, G), 1, 3)
+        p = jnp.exp(s - m_for_s[..., None])
+        corr = jnp.exp(m_blk - m_new)                             # (B,bq,H)
+        l_new = l_blk * corr + jnp.moveaxis(p.sum(-1), 3, 1).reshape(B, block_q, H)
+        pv = jnp.einsum("bkgqs,bskh->bqkgh", p, vs.astype(jnp.float32))
+        a_new = a_blk * corr[..., None] + pv.reshape(B, block_q, H, hd)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, ti * block_q, 1)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, ti * block_q, 1)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, ti * block_q, 1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc, m, l), tile_arr)
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return out[:, :Sq].astype(q.dtype)
+
+
+def dense_attention(q, k, v, *, causal=True, window: int = 0,
+                    scale: Optional[float] = None, logit_softcap: float = 0.0):
+    """Naive O(S^2) oracle used only in tests on tiny shapes."""
+    B, Sq, H, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qs = q.reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qs.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = jnp.tanh(s / logit_softcap) * logit_softcap
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= Skv - Sq + qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > Skv - Sq + qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attend(q, k_cache, v_cache, kv_len, *, window: int = 0,
+                  scale: Optional[float] = None, logit_softcap: float = 0.0,
+                  ring_pos: Optional[jax.Array] = None):
+    """One-token attention against the cache.
+
+    q: (B, H, hd); caches: (B, Smax, Hkv, hd); kv_len: scalar or (B,) valid
+    length. For ring caches (sliding window) the cache holds the last
+    `window` tokens in rotation and masking is by slot validity only.
+    """
+    B, H, hd = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qs = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qs.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = jnp.tanh(s / logit_softcap) * logit_softcap
+    slot = jnp.arange(Smax)
+    kv_len = jnp.asarray(kv_len)
+    lens = kv_len[..., None] if kv_len.ndim else kv_len[None, None]
+    valid = slot[None, :] < lens                       # (B, Smax) or (1,Smax)
+    if window and ring_pos is None:
+        valid &= slot[None, :] >= lens - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    s = s - s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

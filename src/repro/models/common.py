@@ -1,0 +1,226 @@
+"""Shared model-building blocks + logical-axis sharding context.
+
+Sharding design: every parameter is created through `param()` with *logical*
+axis names; a thread-level context installed by the launcher maps logical
+axes -> mesh axes with divisibility-aware fallback. With no context active
+(unit tests, single device) everything is a no-op, so model code never
+mentions a mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical-axis sharding context
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+
+class ShardingRules:
+    """logical axis -> ordered list of candidate mesh axes (or None)."""
+
+    def __init__(self, mesh, rules: Dict[str, Sequence[Optional[str]]]):
+        self.mesh = mesh
+        self.rules = rules
+
+    def resolve(self, logical: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        used = set()
+        out = []
+        for dim, name in zip(shape, logical):
+            pick = None
+            for cand in self.rules.get(name, (None,)) if name else (None,):
+                if cand is None:
+                    break
+                axes = cand if isinstance(cand, tuple) else (cand,)
+                if any(a in used for a in axes):
+                    continue
+                size = math.prod(self.mesh.shape[a] for a in axes)
+                if dim % size == 0:
+                    pick = cand
+                    used.update(axes)
+                    break
+            out.append(pick)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+
+@contextlib.contextmanager
+def sharding_ctx(rules: Optional[ShardingRules]):
+    prev = getattr(_tls, "rules", None)
+    _tls.rules = rules
+    try:
+        yield
+    finally:
+        _tls.rules = prev
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_tls, "rules", None)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain activation sharding (no-op without an active context)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.resolve(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, jax.sharding.NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Param creation with logical axes metadata
+# ---------------------------------------------------------------------------
+
+class Box:
+    """A param leaf carrying its logical axes until the tree is split."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+
+def param(key, shape, axes, dtype=jnp.float32, scale: Optional[float] = None,
+          init: str = "normal") -> Box:
+    assert len(shape) == len(axes), (shape, axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / math.sqrt(fan_in)
+        v = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return Box(v, axes)
+
+
+def split_boxes(tree) -> Tuple[Any, Any]:
+    """(params, axes) from a pytree with Box leaves."""
+    params = jax.tree.map(lambda b: b.value, tree,
+                          is_leaf=lambda x: isinstance(x, Box))
+    axes = jax.tree.map(lambda b: b.axes, tree,
+                        is_leaf=lambda x: isinstance(x, Box))
+    return params, axes
+
+
+def eval_axes(init_fn, *args) -> Any:
+    """Get the axes pytree without allocating params (eval_shape the init)."""
+
+    def shaped(*a):
+        tree = init_fn(*a)
+        return jax.tree.map(lambda b: b.axes, tree,
+                            is_leaf=lambda x: isinstance(x, Box))
+
+    # init is pure python on Box metadata; run it with a dummy key via
+    # eval_shape so no arrays materialize.
+    out = {}
+
+    def wrap(*a):
+        nonlocal out
+        tree = init_fn(*a)
+        params, axes = split_boxes(tree)
+        out = axes
+        return params
+
+    jax.eval_shape(wrap, *args)
+    return out
+
+
+def keygen(key):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)  # gemma-style (1+w)
+
+
+def layernorm(x, w, b, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, cfg):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p["w"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p["w"], cfg.norm_eps)
+
+
+def norm_params(key, d, cfg, axes=("embed",)):
+    if cfg.norm_type == "layernorm":
+        return {"w": param(key, (d,), axes, init="ones"),
+                "b": param(key, (d,), axes, init="zeros")}
+    return {"w": param(key, (d,), axes, init="zeros")}  # (1+w) form
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, theta, fraction=1.0, interleaved=False):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv, rot = rope_freqs(hd, fraction, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    dt = x.dtype
+    xr, xp = x[..., :rot].astype(jnp.float32), x[..., rot:]
+    if interleaved:
+        x0, x1 = xr[..., 0::2], xr[..., 1::2]
+        r0 = x0 * cos - x1 * sin
+        r1 = x1 * cos + x0 * sin
+        xr = jnp.stack([r0, r1], axis=-1).reshape(xr.shape)
+    else:
+        half = rot // 2
+        x0, x1 = xr[..., :half], xr[..., half:]
+        xr = jnp.concatenate([x0 * cos - x1 * sin, x1 * cos + x0 * sin], axis=-1)
+    return jnp.concatenate([xr.astype(dt), xp], axis=-1) if rot < hd else xr.astype(dt)
+
+
+def embed_lookup(table, tokens):
+    """Embedding lookup; with the `onehot_embed` opt active (decode paths),
+    uses a one-hot contraction so GSPMD partitions the vocab-sharded table
+    with a psum of (B, d) partials instead of all-gathering the table
+    (Megatron vocab-parallel embedding, beyond-paper for serving)."""
+    rules = current_rules()
+    if rules is not None and getattr(rules, "onehot_embed", False):
+        V = table.shape[0]
+        onehot = jax.nn.one_hot(tokens, V, dtype=table.dtype)
+        return onehot @ table
+    return table[tokens]
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits

@@ -1,0 +1,231 @@
+"""Mixture-of-Experts FFN (top-k routing, shared experts, first-k-dense).
+
+Dispatch is gather/scatter with a static per-expert capacity
+C = ceil(T*k/E * capacity_factor): tokens are routed to (E, C, d) expert
+buffers, batched-einsum'd through expert weights, and scatter-combined with
+router weights. FLOPs = cf * T * k * ffn_flops — faithful to the sparse
+compute the paper's engine would run, and GSPMD-shardable.
+
+Two dispatch paths:
+  * `moe_apply` — plain pjit. GSPMD handles the data-dependent scatter by
+    gathering activations across the batch axes: correct but collective-
+    heavy at scale (measured 118 s/step collective for mixtral train_4k).
+  * `moe_apply_shard_map` — beyond-paper optimization: the token->expert
+    scatter/gather runs *locally per data shard* under shard_map (manual on
+    the batch axes, auto on "model"), with FSDP-sharded expert weights
+    all-gathered once per layer. Eliminates the activation gathers; see
+    EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import Box, act_fn, current_rules, param, shard
+
+
+def moe_params(keys, cfg) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    m = cfg.moe
+    E = m.num_experts
+    p = {
+        "router": param(next(keys), (d, E), ("embed", "expert")),
+        "wi": param(next(keys), (E, d, 2 * ff), ("expert", "embed", "mlp")),
+        "wo": param(next(keys), (E, ff, d), ("expert", "mlp", "embed")),
+    }
+    if m.num_shared_experts:
+        sf = ff * m.num_shared_experts
+        p["shared_wi"] = param(next(keys), (d, 2 * sf), ("embed", "mlp"))
+        p["shared_wo"] = param(next(keys), (sf, d), ("mlp", "embed"))
+    return p
+
+
+def moe_apply(p, x, cfg, capacity_factor: float = 0.0):
+    """x: (B, S, d) -> (B, S, d). Dispatch implementation picked from the
+    active sharding rules: `moe_grouped` (GShard-style shard-local groups,
+    pure pjit) > `moe_shard_map` (manual; hits an XLA-CPU AD bug under
+    grad, kept for TPU/inference) > plain pjit."""
+    rules = current_rules()
+    if rules is not None and getattr(rules, "moe_grouped", False):
+        return moe_apply_grouped(p, x, cfg, rules, capacity_factor)
+    if rules is not None and getattr(rules, "moe_shard_map", False):
+        return moe_apply_shard_map(p, x, cfg, rules, capacity_factor)
+    return _moe_apply_pjit(p, x, cfg, capacity_factor)
+
+
+def moe_apply_grouped(p, x, cfg, rules, capacity_factor: float = 0.0):
+    """Beyond-paper dispatch v2: tokens reshaped into G groups aligned with
+    the batch shards; routing/scatter/combine vmapped per group, so every
+    gather/scatter is *group-local* and GSPMD partitions the G axis over
+    the batch mesh axes with no cross-shard dispatch traffic — expert FFN
+    einsums still shard over "model"/FSDP as usual."""
+    mesh = rules.mesh
+    shards = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            shards *= mesh.shape[a]
+    B, S, d = x.shape
+    T = B * S
+    G = math.gcd(T, shards)
+    xg = x.reshape(G, T // G, d)
+    xg = shard(xg, "batch", None, "embed_act")
+
+    # NOTE (§Perf log): forcing an explicit FSDP weight gather here
+    # (shard(wi, P(None,None,"model"))) was tried and REFUTED — the
+    # replication constraint propagated into the vmapped scatter and blew
+    # collective traffic from 18.6 to 42.8 TB/chip/step. GSPMD keeps the
+    # better schedule when the einsum operands are left unconstrained.
+    core = partial(_routed_core, cfg=cfg, capacity_factor=capacity_factor,
+                   constrain=False)
+    out, aux = jax.vmap(core, in_axes=(0, None, None, None))(
+        xg, p["router"], p["wi"], p["wo"])
+    out = out.reshape(B, S, d)
+    if cfg.moe.num_shared_experts:
+        out = out + _shared_part(p, x.reshape(T, d), cfg).reshape(x.shape)
+    return out, jnp.mean(aux)
+
+
+def _routed_core(xf, router, wi, wo, cfg=None, capacity_factor: float = 0.0,
+                 constrain: bool = True):
+    """Top-k routed experts on flat tokens. Returns (out (T, d), aux)."""
+    T, d = xf.shape
+    m = cfg.moe
+    E, k = m.num_experts, m.num_experts_per_tok
+    act = act_fn(cfg.mlp_activation)
+    cf = capacity_factor or m.capacity_factor or 2.0
+
+    logits = (xf.astype(jnp.float32) @ router.astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    topw, topi = jax.lax.top_k(gates, k)                         # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    C = int(math.ceil(T * k / E * cf))
+    C = max(C, 8)
+    flat_e = topi.reshape(-1)                                    # (T*k,)
+    # position of each routed token within its expert's buffer
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (T*k, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)             # exclusive
+    slot = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    overflow = slot >= C                                         # GShard-style drop
+    dst = jnp.where(overflow, E * C, flat_e * C + slot)          # sentinel OOB
+
+    tok_idx = jnp.repeat(jnp.arange(T), k)
+    buf = jnp.zeros((E * C, d), xf.dtype).at[dst].set(xf[tok_idx], mode="drop")
+    buf = buf.reshape(E, C, d)
+    if constrain:
+        buf = shard(buf, "expert", None, "embed_act")
+
+    h = jnp.einsum("ecd,edf->ecf", buf, wi)                      # (E, C, 2ff)
+    g, u = jnp.split(h, 2, axis=-1)
+    h = act(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, wo).reshape(E * C, d)      # (E*C, d)
+
+    w = topw.reshape(-1).astype(xf.dtype)                        # (T*k,)
+    w = jnp.where(overflow, 0, w)
+    gathered = y[jnp.minimum(dst, E * C - 1)] * w[:, None]       # (T*k, d)
+    out = jnp.zeros((T, d), xf.dtype).at[tok_idx].add(gathered)
+    aux = _load_balance_loss(gates, topi, E)
+    return out, aux
+
+
+def _shared_part(p, xf, cfg):
+    act = act_fn(cfg.mlp_activation)
+    h = xf @ p["shared_wi"]
+    g, u = jnp.split(h, 2, axis=-1)
+    return (act(g) * u) @ p["shared_wo"]
+
+
+def _moe_apply_pjit(p, x, cfg, capacity_factor: float = 0.0):
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    xf = x.reshape(B * S, d)
+    out, aux = _routed_core(xf, p["router"], p["wi"], p["wo"], cfg,
+                            capacity_factor)
+    if cfg.moe.num_shared_experts:
+        out = out + _shared_part(p, xf, cfg)
+    return out.reshape(B, S, d), aux
+
+
+def _manual_entries(rules, logical, shape, manual):
+    """Resolved spec entries restricted to the manual axes."""
+    spec = rules.resolve(logical, shape)
+    entries = []
+    for e in tuple(spec) + (None,) * (len(shape) - len(spec)):
+        if e is None:
+            entries.append(None)
+            continue
+        ax = e if isinstance(e, tuple) else (e,)
+        keep = tuple(a for a in ax if a in manual)
+        entries.append(keep if len(keep) > 1 else (keep[0] if keep else None))
+    return entries
+
+
+def _gather_manual(v, entries):
+    """all_gather any manually-sharded dims back to full size (tiled)."""
+    for dim, e in enumerate(entries):
+        if e is None:
+            continue
+        for ax in (e if isinstance(e, tuple) else (e,)):
+            v = jax.lax.all_gather(v, ax, axis=dim, tiled=True)
+    return v
+
+
+def moe_apply_shard_map(p, x, cfg, rules, capacity_factor: float = 0.0):
+    """Beyond-paper dispatch: scatter/gather stays LOCAL per batch shard
+    (manual over the batch axes; "model" remains auto for the expert FFN
+    einsums). Expert weights arrive FSDP-sharded and are all-gathered once
+    per layer — the same traffic dense FSDP layers pay."""
+    mesh = rules.mesh
+    manual = frozenset(a for a in ("pod", "data") if a in mesh.shape)
+    B, S, d = x.shape
+    x_ent = _manual_entries(rules, ("batch", None, "embed_act"), x.shape, manual)
+    r_ent = _manual_entries(rules, ("embed", "expert"), p["router"].shape, manual)
+    wi_ent = _manual_entries(rules, ("expert", "embed", "mlp"), p["wi"].shape, manual)
+    wo_ent = _manual_entries(rules, ("expert", "mlp", "embed"), p["wo"].shape, manual)
+    x_spec = P(*x_ent)
+
+    def body(xl, router, wi, wo):
+        router = _gather_manual(router, r_ent)
+        wi = _gather_manual(wi, wi_ent)
+        wo = _gather_manual(wo, wo_ent)
+        Bl, Sl, _ = xl.shape
+        out, aux = _routed_core(xl.reshape(Bl * Sl, d), router, wi, wo, cfg,
+                                capacity_factor, constrain=False)
+        aux = jax.lax.pmean(aux, tuple(sorted(manual)))
+        return out.reshape(xl.shape), aux
+
+    fn = jax.shard_map(body, mesh=mesh, axis_names=manual,
+                       in_specs=(x_spec, P(*r_ent), P(*wi_ent), P(*wo_ent)),
+                       out_specs=(x_spec, P()), check_vma=False)
+    out, aux = fn(x, p["router"], p["wi"], p["wo"])
+    if cfg.moe.num_shared_experts:
+        xf = x.reshape(B * S, d)
+        out = out + _shared_part(p, xf, cfg).reshape(x.shape)
+    return out, aux
+
+
+def _load_balance_loss(gates, topi, E):
+    """Switch-style aux loss (fraction-routed x mean gate)."""
+    T, k = topi.shape
+    fr = jnp.zeros(E, jnp.float32).at[topi.reshape(-1)].add(1.0) / (T * k)
+    pe = gates.mean(axis=0)
+    return E * jnp.sum(fr * pe)
+
+
+def dense_ffn_params(keys, d, ff):
+    return {
+        "wi": param(next(keys), (d, 2 * ff), ("embed", "mlp")),
+        "wo": param(next(keys), (ff, d), ("mlp", "embed")),
+    }
+
+
+def dense_ffn_apply(p, x, cfg):
+    act = act_fn(cfg.mlp_activation)
+    h = x @ p["wi"]
+    g, u = jnp.split(h, 2, axis=-1)
+    return (act(g) * u) @ p["wo"]

@@ -1,0 +1,254 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+`ssd_chunked` is the block-decomposition algorithm (diagonal within-chunk
+attention-like term + low-rank inter-chunk recurrence) — the TPU-friendly
+formulation: all heavy ops are einsums over (chunk, chunk) tiles sized for
+the MXU, with a short lax.scan across chunks for the state recurrence.
+
+`ssd_step` is the O(1) decode recurrence (the "KV cache" of an SSM is the
+constant-size state — DistServe's KV-migration cost collapses accordingly).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import param, rmsnorm, shard
+
+
+def _segsum(a):
+    """Lower-triangular pairwise cumulative sums.
+
+    a: (..., Q) -> (..., Q, Q) where out[..., t, s] = sum_{s < r <= t} a[r]
+    (0 on diagonal, -inf above).
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int,
+                h0=None) -> Tuple[jax.Array, jax.Array]:
+    """SSD forward.
+
+    x: (b, S, nh, hd); dt: (b, S, nh); A: (nh,) negative;
+    B, C: (b, S, G, N); D: (nh,). Returns (y (b,S,nh,hd), h_final (b,nh,hd,N)).
+    """
+    b, S, nh, hd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = nh // G
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, nh, hd).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, nh).astype(f32)
+    Bc = B.reshape(b, nc, chunk, G, N).astype(f32)
+    Cc = C.reshape(b, nc, chunk, G, N).astype(f32)
+
+    a = dtc * A.astype(f32)                                     # (b,nc,Q,nh)
+    a_cum = jnp.cumsum(a, axis=2)                               # within-chunk
+    xdt = xc * dtc[..., None]                                   # x * dt
+
+    # --- 1. diagonal (within-chunk) term -------------------------------
+    L = jnp.exp(_segsum(jnp.moveaxis(a, -1, 2)))                # (b,nc,nh,Q,Q)
+    # scores: C_t . B_s  (group-shared)
+    CB = jnp.einsum("bcqgn,bcsgn->bcgqs", Cc, Bc)               # (b,nc,G,Q,Q)
+    CB = jnp.repeat(CB, rep, axis=2)                            # (b,nc,nh,Q,Q)
+    M = CB * L
+    y_diag = jnp.einsum("bchqs,bcshd->bcqhd", M, xdt)
+
+    # --- 2. per-chunk end states ---------------------------------------
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)         # (b,nc,Q,nh)
+    Bh = jnp.repeat(Bc, rep, axis=3)                            # (b,nc,Q,nh,N)
+    S_c = jnp.einsum("bcqhn,bcqh,bcqhd->bchdn",
+                     Bh, decay_to_end, xdt)                     # (b,nc,nh,hd,N)
+
+    # --- 3. inter-chunk recurrence (scan over chunks) -------------------
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                   # (b,nc,nh)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, N), f32)
+
+    def step(h, inp):
+        s_c, dec = inp                                          # (b,nh,hd,N),(b,nh)
+        h_prev = h
+        h = h * dec[..., None, None] + s_c
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        step, h0.astype(f32),
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                       # (b,nc,nh,hd,N)
+
+    # --- 4. off-diagonal contribution from carried-in state -------------
+    state_decay = jnp.exp(a_cum)                                # (b,nc,Q,nh)
+    Ch = jnp.repeat(Cc, rep, axis=3)                            # (b,nc,Q,nh,N)
+    y_off = jnp.einsum("bcqhn,bcqh,bchdn->bcqhd",
+                       Ch, state_decay, h_prevs)
+
+    y = (y_diag + y_off).reshape(b, S, nh, hd)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(h, x_t, dt_t, A, B_t, C_t, D):
+    """Single decode step. h: (b,nh,hd,N); x_t: (b,nh,hd); dt_t: (b,nh);
+    B_t, C_t: (b,G,N). Returns (h', y (b,nh,hd))."""
+    b, nh, hd = x_t.shape
+    G = B_t.shape[1]
+    rep = nh // G
+    f32 = jnp.float32
+    dec = jnp.exp(dt_t.astype(f32) * A.astype(f32))             # (b,nh)
+    Bh = jnp.repeat(B_t.astype(f32), rep, axis=1)               # (b,nh,N)
+    Ch = jnp.repeat(C_t.astype(f32), rep, axis=1)
+    xdt = x_t.astype(f32) * dt_t.astype(f32)[..., None]         # (b,nh,hd)
+    h = h * dec[..., None, None] + xdt[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhdn,bhn->bhd", h, Ch) + x_t.astype(f32) * D.astype(f32)[None, :, None]
+    return h, y.astype(x_t.dtype)
+
+
+def ssd_reference(x, dt, A, B, C, D, h0=None):
+    """Naive sequential recurrence oracle (tests only)."""
+    b, S, nh, hd = x.shape
+    h = jnp.zeros((b, nh, hd, B.shape[-1]), jnp.float32) if h0 is None else h0
+    ys = []
+    for t in range(S):
+        h, y = ssd_step(h, x[:, t], dt[:, t], A, B[:, t], C[:, t], D)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), h
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block (in_proj -> causal conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def mamba_params(keys, cfg) -> Dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    gn = s.ngroups * s.state_dim
+    dt_init = jnp.log(jnp.expm1(jnp.exp(
+        jax.random.uniform(next(keys), (nh,), jnp.float32) *
+        (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))))
+    cw = 1.0 / s.conv_width ** 0.5
+    return {
+        # per-component in_proj so TP sharding never cuts across segments
+        "wz": param(next(keys), (d, d_in), ("embed", "ssm_inner")),
+        "wx": param(next(keys), (d, d_in), ("embed", "ssm_inner")),
+        "wB": param(next(keys), (d, gn), ("embed", "state")),
+        "wC": param(next(keys), (d, gn), ("embed", "state")),
+        "wdt": param(next(keys), (d, nh), ("embed", "heads")),
+        "conv_x": param(next(keys), (s.conv_width, d_in), (None, "ssm_inner"), scale=cw),
+        "conv_xb": param(next(keys), (d_in,), ("ssm_inner",), init="zeros"),
+        "conv_B": param(next(keys), (s.conv_width, gn), (None, "state"), scale=cw),
+        "conv_Bb": param(next(keys), (gn,), ("state",), init="zeros"),
+        "conv_C": param(next(keys), (s.conv_width, gn), (None, "state"), scale=cw),
+        "conv_Cb": param(next(keys), (gn,), ("state",), init="zeros"),
+        "A_log": Boxed(jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32) % 15 + 1.0), ("heads",)),
+        "D": param(next(keys), (nh,), ("heads",), init="ones"),
+        "dt_bias": Boxed(dt_init, ("heads",)),
+        "norm_w": param(next(keys), (d_in,), ("ssm_inner",), init="zeros"),
+        "out_proj": param(next(keys), (d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def Boxed(v, axes):
+    from .common import Box
+    return Box(v, axes)
+
+
+def _causal_conv(x, w, b, state0, S):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C); state0: (B, W-1, C)."""
+    xp = jnp.concatenate([state0, x], axis=1)
+    W = w.shape[0]
+    y = sum(xp[:, i:i + S] * w[i] for i in range(W))
+    return jax.nn.silu(y + b), xp[:, S:]
+
+
+def mamba_apply(p, x, cfg, h0=None, conv0=None):
+    """Full-sequence (train/prefill). x: (B, S, d).
+
+    Returns (y (B,S,d), (ssm_state, conv_state_dict))."""
+    Bsz, S, d = x.shape
+    s = cfg.ssm
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    gn = s.ngroups * s.state_dim
+    z = x @ p["wz"]
+    xs = x @ p["wx"]
+    Bm = x @ p["wB"]
+    Cm = x @ p["wC"]
+    dt = x @ p["wdt"]
+    if conv0 is None:
+        zz = lambda c: jnp.zeros((Bsz, s.conv_width - 1, c), x.dtype)
+        conv0 = {"x": zz(d_in), "B": zz(gn), "C": zz(gn)}
+    xs, st_x = _causal_conv(xs, p["conv_x"], p["conv_xb"], conv0["x"], S)
+    Bm, st_B = _causal_conv(Bm, p["conv_B"], p["conv_Bb"], conv0["B"], S)
+    Cm, st_C = _causal_conv(Cm, p["conv_C"], p["conv_Cb"], conv0["C"], S)
+    conv_state = {"x": st_x, "B": st_B, "C": st_C}
+
+    xh = xs.reshape(Bsz, S, nh, s.head_dim)
+    Bh = Bm.reshape(Bsz, S, s.ngroups, s.state_dim)
+    Ch = Cm.reshape(Bsz, S, s.ngroups, s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    chunk = min(s.chunk_size, S)
+    pad = (-S) % chunk
+    if pad:
+        # padded steps are identities: dt=0 -> no decay, no input
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, h = ssd_chunked(xh, dt, A, Bh, Ch, p["D"], chunk, h0=h0)
+    y = y[:, :S].reshape(Bsz, S, d_in)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["out_proj"], (h, conv_state)
+
+
+def mamba_step(p, x_t, cfg, state):
+    """Decode step. x_t: (B, d); state = (ssm_state, conv_state_dict)."""
+    h, conv_state = state
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+
+    def conv1(v, w, b, st):
+        win = jnp.concatenate([st, v[:, None]], axis=1)
+        y = jnp.einsum("bwc,wc->bc", win, w)
+        return jax.nn.silu(y + b), win[:, 1:]
+
+    z = x_t @ p["wz"]
+    xs, st_x = conv1(x_t @ p["wx"], p["conv_x"], p["conv_xb"], conv_state["x"])
+    Bm, st_B = conv1(x_t @ p["wB"], p["conv_B"], p["conv_Bb"], conv_state["B"])
+    Cm, st_C = conv1(x_t @ p["wC"], p["conv_C"], p["conv_Cb"], conv_state["C"])
+    dt = jax.nn.softplus((x_t @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(-1, nh, s.head_dim)
+    Bh = Bm.reshape(-1, s.ngroups, s.state_dim)
+    Ch = Cm.reshape(-1, s.ngroups, s.state_dim)
+    h, y = ssd_step(h, xh, dt, A, Bh, Ch, p["D"])
+    y = y.reshape(-1, d_in)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["out_proj"], (h, {"x": st_x, "B": st_B, "C": st_C})
+
+
+def mamba_state_specs(cfg, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    gn = s.ngroups * s.state_dim
+    W = s.conv_width - 1
+    conv = {"x": jax.ShapeDtypeStruct((batch, W, d_in), dtype),
+            "B": jax.ShapeDtypeStruct((batch, W, gn), dtype),
+            "C": jax.ShapeDtypeStruct((batch, W, gn), dtype)}
+    return (
+        jax.ShapeDtypeStruct((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+        conv,
+    )

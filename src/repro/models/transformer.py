@@ -1,0 +1,319 @@
+"""Decoder-only transformer covering dense / MoE / VLM / local-global archs.
+
+Layers are grouped into *segments* of homogeneous block kind (run-length
+encoded from the per-layer pattern, e.g. gemma3's 5-local:1-global). Params
+of each segment are stacked on a leading "layers" axis and executed with
+lax.scan, keeping the lowered HLO O(1) in depth — essential for compiling
+56–80-layer configs on the dry-run host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import decode_attend, flash_reference
+from .common import (Box, act_fn, apply_norm, apply_rope, embed_lookup,
+                     keygen, norm_params, param, rmsnorm, shard, split_boxes)
+from .moe import dense_ffn_apply, dense_ffn_params, moe_apply, moe_params
+
+LOCAL_ROPE_THETA = 10000.0  # gemma3 local layers
+
+
+# ---------------------------------------------------------------------------
+# segment plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str      # "dense" | "moe" | "local" | "global"
+    n: int
+
+
+def layer_plan(cfg) -> List[Segment]:
+    kinds = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "moe":
+            kind = "dense" if i < cfg.moe.first_k_dense else "moe"
+        elif cfg.local_global_ratio:
+            r = cfg.local_global_ratio
+            kind = "global" if (i % (r + 1)) == r else "local"
+        elif cfg.sliding_window:
+            kind = "local"
+        else:
+            kind = "dense"
+        kinds.append(kind)
+    segs: List[Segment] = []
+    for k in kinds:
+        if segs and segs[-1].kind == k:
+            segs[-1] = Segment(k, segs[-1].n + 1)
+        else:
+            segs.append(Segment(k, 1))
+    return segs
+
+
+def _is_windowed(kind: str, cfg) -> bool:
+    return kind == "local" and cfg.sliding_window > 0
+
+
+def _rope_theta(kind: str, cfg) -> float:
+    if cfg.local_global_ratio and kind == "local":
+        return LOCAL_ROPE_THETA
+    return cfg.rope_theta
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def stack_init(fn, n: int):
+    trees = [fn() for _ in range(n)]
+
+    def merge(*boxes):
+        v = jnp.stack([b.value for b in boxes])
+        return Box(v, ("layers",) + boxes[0].axes)
+
+    return jax.tree.map(merge, *trees, is_leaf=lambda x: isinstance(x, Box))
+
+
+def attn_params(keys, cfg):
+    d = cfg.d_model
+    p = {
+        "wq": param(next(keys), (d, cfg.num_heads, cfg.head_dim),
+                    ("embed", "heads", None)),
+        "wk": param(next(keys), (d, cfg.num_kv_heads, cfg.head_dim),
+                    ("kv_embed", "kv_heads", None)),
+        "wv": param(next(keys), (d, cfg.num_kv_heads, cfg.head_dim),
+                    ("kv_embed", "kv_heads", None)),
+        "wo": param(next(keys), (cfg.num_heads, cfg.head_dim, d),
+                    ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = param(next(keys), (cfg.head_dim,), (None,), init="zeros")
+        p["k_norm"] = param(next(keys), (cfg.head_dim,), (None,), init="zeros")
+    return p
+
+
+def layer_params(keys, cfg, kind: str):
+    p = {
+        "ln1": norm_params(next(keys), cfg.d_model, cfg),
+        "attn": attn_params(keys, cfg),
+        "ln2": norm_params(next(keys), cfg.d_model, cfg),
+    }
+    if kind == "moe":
+        p["moe"] = moe_params(keys, cfg)
+    else:
+        ff = cfg.moe.dense_d_ff or cfg.d_ff if cfg.family == "moe" else cfg.d_ff
+        p["ffn"] = dense_ffn_params(keys, cfg.d_model, ff)
+    return p
+
+
+def init(key, cfg):
+    keys = keygen(key)
+    d = cfg.d_model
+    p: Dict[str, Any] = {
+        "embed": param(next(keys), (cfg.vocab_size, d), ("vocab", "embed"),
+                       scale=cfg.d_model ** -0.5),
+        "final_norm": norm_params(next(keys), d, cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = param(next(keys), (d, cfg.vocab_size), ("embed", "vocab"))
+    for i, seg in enumerate(layer_plan(cfg)):
+        p[f"seg{i}"] = stack_init(lambda: layer_params(keys, cfg, seg.kind), seg.n)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# attention block application
+# ---------------------------------------------------------------------------
+
+def _qkv(p, x, cfg, positions, theta):
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, theta, cfg.rope_fraction, cfg.rope_interleaved)
+    k = apply_rope(k, positions, theta, cfg.rope_fraction, cfg.rope_interleaved)
+    return q, k, v
+
+
+def attn_full(p, x, cfg, kind, positions, attn_blocks=(512, 512)):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    window = cfg.sliding_window if _is_windowed(kind, cfg) else 0
+    q, k, v = _qkv(p, x, cfg, positions, _rope_theta(kind, cfg))
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    o = flash_reference(q, k, v, causal=True, window=window,
+                        block_q=attn_blocks[0], block_kv=attn_blocks[1],
+                        logit_softcap=cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype)), (k, v)
+
+
+def attn_decode(p, x, cfg, kind, k_cache, v_cache, pos):
+    """Single-token attention. x: (B, d); pos: (B,) current write index.
+    Returns (out, k_cache', v_cache')."""
+    B, d = x.shape
+    window = cfg.sliding_window if _is_windowed(kind, cfg) else 0
+    q, k, v = _qkv(p, x[:, None], cfg, pos[:, None], _rope_theta(kind, cfg))
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    Smax = k_cache.shape[1]
+    widx = (pos % Smax) if window else jnp.minimum(pos, Smax - 1)
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, widx].set(k.astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, widx].set(v.astype(v_cache.dtype))
+    kv_len = jnp.minimum(pos + 1, Smax)
+    o = decode_attend(q, k_cache, v_cache, kv_len,
+                      window=0,  # ring cache already bounds the window
+                      logit_softcap=cfg.attn_logit_softcap,
+                      ring_pos=pos if window else None)
+    return jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(o.dtype)), k_cache, v_cache
+
+
+def _ffn(pl, x, cfg, kind):
+    if kind == "moe":
+        out, aux = moe_apply(pl["moe"], x, cfg)
+        return out, aux
+    return dense_ffn_apply(pl["ffn"], x, cfg), 0.0
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg, frontend_embeds=None):
+    x = params["embed"][tokens]  # vocab-sharded gather
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _layer_body(x, pl, cfg, kind, positions, attn_blocks):
+    h = apply_norm(x, pl["ln1"], cfg)
+    a, kv = attn_full(pl["attn"], h, cfg, kind, positions, attn_blocks)
+    x = x + a
+    h = apply_norm(x, pl["ln2"], cfg)
+    f, aux = _ffn(pl, h, cfg, kind)
+    x = x + f
+    x = shard(x, "batch", None, "embed_act")
+    return x, kv, aux
+
+
+def forward(params, tokens, cfg, *, frontend_embeds=None, remat=False,
+            attn_blocks=(512, 512), return_cache=False, max_len=None):
+    """Full-sequence forward. tokens: (B, S_text). Returns (logits, cache, aux)."""
+    x = embed_tokens(params, tokens, cfg, frontend_embeds)
+    x = shard(x, "batch", None, "embed_act")
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    aux_total = 0.0
+    cache: Dict[str, Any] = {}
+    for i, seg in enumerate(layer_plan(cfg)):
+        def body(x, pl, _kind=seg.kind):
+            x, kv, aux = _layer_body(x, pl, cfg, _kind, positions, attn_blocks)
+            if not return_cache:
+                kv = (jnp.zeros((), x.dtype),) * 2  # don't carry KV in train
+            return x, (kv, aux)
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=())
+        x, (kvs, auxs) = jax.lax.scan(body, x, params[f"seg{i}"])
+        aux_total = aux_total + jnp.sum(auxs)
+        if return_cache:
+            k_seg, v_seg = kvs
+            target = S if max_len is None else max_len
+            if _is_windowed(seg.kind, cfg):
+                target = min(cfg.sliding_window, target)
+            if S > target:
+                # ring-pack the trailing `target` positions
+                idx = (jnp.arange(S - target, S) % target)
+                k_seg = jnp.zeros_like(k_seg[:, :, :target]).at[:, :, idx].set(k_seg[:, :, -target:])
+                v_seg = jnp.zeros_like(v_seg[:, :, :target]).at[:, :, idx].set(v_seg[:, :, -target:])
+            elif S < target:
+                pad = [(0, 0), (0, 0), (0, target - S), (0, 0), (0, 0)]
+                k_seg, v_seg = jnp.pad(k_seg, pad), jnp.pad(v_seg, pad)
+            cache[f"seg{i}"] = {"k": k_seg, "v": v_seg}
+    x = apply_norm(x, params["final_norm"], cfg)
+    if return_cache:
+        # prefill only needs the last position's logits — computing the
+        # full (B,S,V) tensor would cost ~V/d extra memory (§Perf)
+        logits = unembed(params, x[:, -1], cfg)[:, None]
+        cache["pos"] = jnp.full((B,), S, jnp.int32)
+    else:
+        logits = unembed(params, x, cfg)
+    return logits, cache, aux_total
+
+
+def unembed(params, x, cfg):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ w.astype(x.dtype)
+    # arity-aware constraint: decode logits are (B, V), train/prefill (B,S,V)
+    ax = ("batch", None, "vocab") if logits.ndim == 3 else ("batch", "vocab")
+    return shard(logits, *ax)
+
+
+def prefill(params, tokens, cfg, *, frontend_embeds=None,
+            attn_blocks=(512, 512), max_len=None):
+    """Returns (last-token logits (B, V), cache sized for max_len)."""
+    logits, cache, _ = forward(params, tokens, cfg,
+                               frontend_embeds=frontend_embeds,
+                               attn_blocks=attn_blocks, return_cache=True,
+                               max_len=max_len)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cache, tokens, cfg):
+    """tokens: (B,) int32. Returns (logits (B, V), cache')."""
+    x = embed_lookup(params["embed"], tokens)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = shard(x, "batch", "embed_act")
+    pos = cache["pos"]
+    new_cache: Dict[str, Any] = {}
+    for i, seg in enumerate(layer_plan(cfg)):
+        kc, vc = cache[f"seg{i}"]["k"], cache[f"seg{i}"]["v"]
+
+        def body(x, layer, _kind=seg.kind):
+            pl, kc_l, vc_l = layer
+            h = apply_norm(x[:, None], pl["ln1"], cfg)[:, 0]
+            a, kc_l, vc_l = attn_decode(pl["attn"], h, cfg, _kind, kc_l, vc_l, pos)
+            x = x + a
+            h = apply_norm(x[:, None], pl["ln2"], cfg)[:, 0]
+            f, _ = _ffn(pl, h[:, None], cfg, _kind)
+            return x + f[:, 0], (kc_l, vc_l)
+
+        x, (kc, vc) = jax.lax.scan(body, x, (params[f"seg{i}"], kc, vc))
+        new_cache[f"seg{i}"] = {"k": kc, "v": vc}
+    x = apply_norm(x[:, None], params["final_norm"], cfg)[:, 0]
+    logits = unembed(params, x, cfg)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the KV cache (dry-run decode inputs)."""
+    out: Dict[str, Any] = {}
+    for i, seg in enumerate(layer_plan(cfg)):
+        S = min(cfg.sliding_window, max_len) if _is_windowed(seg.kind, cfg) else max_len
+        shp = (seg.n, batch, S, cfg.num_kv_heads, cfg.head_dim)
+        out[f"seg{i}"] = {"k": jax.ShapeDtypeStruct(shp, dtype),
+                          "v": jax.ShapeDtypeStruct(shp, dtype)}
+    out["pos"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return out
+
+
+def cache_logical_axes(cfg, batch: int = 0, max_len: int = 0):
+    """Logical axes matching cache_specs (same tree structure)."""
+    out: Dict[str, Any] = {}
+    for i, _seg in enumerate(layer_plan(cfg)):
+        ax = ("layers", "kv_batch", "kv_seq", "kv_heads", None)
+        out[f"seg{i}"] = {"k": ax, "v": ax}
+    out["pos"] = ("kv_batch",)
+    return out

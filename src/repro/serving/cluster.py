@@ -1,0 +1,285 @@
+"""Live disaggregated cluster (DistServe runtime, Fig. 6) and the colocated
+baseline, on real JAX engines with virtual-clock concurrency emulation.
+
+Controller: FCFS arrival queue -> shortest-queue prefill dispatch ->
+pull-based KV migration -> least-loaded decode dispatch. Fault injection
+hooks exercise the failover paths in core.fault.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.fault import HeartbeatMonitor, plan_failover
+from ..core.kv_transfer import TransferManager, kv_bytes
+from ..core.scheduler import FCFSQueue, least_loaded, shortest_queue
+from ..core.workload import Request
+from .engine import Engine, Sequence
+
+
+@dataclasses.dataclass
+class ServedResult:
+    rid: int
+    tokens: List[int]
+    ttft: float
+    tpot: float
+    finish: float
+
+
+class DisaggCluster:
+    """n_prefill + n_decode live engines; virtual-clock event loop."""
+
+    def __init__(self, cfg, params, *, n_prefill: int = 1, n_decode: int = 1,
+                 max_batch: int = 8, max_len: int = 256,
+                 transfer_bandwidth: float = 50e9, lm_tokens: int = 256,
+                 attn_blocks=(64, 64)):
+        self.cfg = cfg
+        self.prefill = [Engine(cfg, params, max_batch=1, max_len=max_len,
+                               attn_blocks=attn_blocks)
+                        for _ in range(n_prefill)]
+        self.decode = [Engine(cfg, params, max_batch=max_batch,
+                              max_len=max_len, attn_blocks=attn_blocks)
+                       for _ in range(n_decode)]
+        self.queues = [FCFSQueue(token_of=lambda s: len(s.tokens))
+                       for _ in range(n_prefill)]
+        self.tx = TransferManager(transfer_bandwidth)
+        self.lm_tokens = lm_tokens
+        self.monitor = HeartbeatMonitor(timeout=1e9)
+        for i in range(n_prefill):
+            self.monitor.register(f"prefill{i}")
+        for i in range(n_decode):
+            self.monitor.register(f"decode{i}")
+        self.failed_prefill: set = set()
+        self.failed_decode: set = set()
+
+    # -- fault injection ------------------------------------------------
+    def fail_decode(self, idx: int) -> List[int]:
+        """Kill a decode instance; returns rids needing re-prefill."""
+        self.monitor.mark_failed(f"decode{idx}")
+        self.failed_decode.add(idx)
+        lost = [s.rid for s in getattr(self.decode[idx], "_active", [])]
+        return lost
+
+    def fail_prefill(self, idx: int) -> List[int]:
+        self.monitor.mark_failed(f"prefill{idx}")
+        self.failed_prefill.add(idx)
+        return [s.rid for s in self.queues[idx].items]
+
+    # -- main loop --------------------------------------------------------
+    def run(self, requests: List[Request],
+            fail_decode_at: Optional[Tuple[float, int]] = None
+            ) -> Dict[int, ServedResult]:
+        """Drive all requests to completion on the virtual clock."""
+        rng = np.random.default_rng(0)
+        seqs: Dict[int, Sequence] = {}
+        for r in requests:
+            toks = rng.integers(1, self.cfg.vocab_size,
+                                size=r.in_len).tolist()
+            seqs[r.rid] = Sequence(r.rid, toks, r.out_len)
+
+        evq: List[Tuple[float, int, str, Any]] = []
+        ctr = itertools.count()
+
+        def push(t, kind, payload):
+            heapq.heappush(evq, (t, next(ctr), kind, payload))
+
+        for r in requests:
+            push(r.arrive, "arrive", r)
+        if fail_decode_at is not None:
+            push(fail_decode_at[0], "fail_decode", fail_decode_at[1])
+
+        # per-engine virtual clocks
+        p_free = [0.0] * len(self.prefill)
+        d_free = [0.0] * len(self.decode)
+        d_active: List[List[Sequence]] = [[] for _ in self.decode]
+        d_ready: List[List[Tuple[Request, Any]]] = [[] for _ in self.decode]
+        results: Dict[int, ServedResult] = {}
+
+        def healthy_p(i):
+            return i not in self.failed_prefill
+
+        def healthy_d(i):
+            return i not in self.failed_decode
+
+        def start_prefill(i, now):
+            if not healthy_p(i) or not self.queues[i].items or p_free[i] > now:
+                return
+            batch = self.queues[i].form_batch(self.lm_tokens, max_batch=1)
+            for seq in batch:
+                req = seq._req
+                first, blob, dt = self.prefill[i].prefill_request(seq)
+                seq.tokens.append(first)
+                seq.produced += 1
+                req.first_token = now + dt
+                if seq.produced >= seq.out_len:
+                    seq.done = True
+                    req.finish = now + dt
+                    _finish(req, seq, now + dt)
+                else:
+                    nbytes = kv_bytes(self.cfg, len(seq.tokens) - 1)
+                    self.tx.park(seq.rid, blob, nbytes, now + dt)
+                    push(now + dt, "dispatch_decode", (req, seq))
+                p_free[i] = now + dt
+                push(now + dt, "poke_prefill", i)
+
+        def _finish(req, seq, t):
+            ttft = req.first_token - req.arrive
+            tpot = ((req.finish - req.first_token) / max(seq.out_len - 1, 1))
+            results[req.rid] = ServedResult(req.rid, seq.tokens, ttft, tpot,
+                                            req.finish)
+
+        def start_decode(i, now):
+            if not healthy_d(i) or d_free[i] > now:
+                return
+            d = self.decode[i]
+            # pull-based admission
+            while d_ready[i] and d.has_slot():
+                req, seq = d_ready[i].pop(0)
+                blob, t_done = self.tx.pull(seq.rid, now)
+                d.insert_kv(seq, blob)
+                seq._req.decode_admit = max(now, t_done)
+                d_active[i].append(seq)
+            d._active = d_active[i]
+            if not d_active[i]:
+                return
+            dt = d.decode_step(d_active[i])
+            done_t = now + dt
+            d_free[i] = done_t
+            still = []
+            for seq in d_active[i]:
+                if seq.done:
+                    seq._req.finish = done_t
+                    _finish(seq._req, seq, done_t)
+                    d.release(seq)
+                else:
+                    still.append(seq)
+            d_active[i] = still
+            push(done_t, "poke_decode", i)
+
+        while evq:
+            t, _, kind, payload = heapq.heappop(evq)
+            if kind == "arrive":
+                r = payload
+                seq = seqs[r.rid]
+                seq._req = r
+                alive = [i for i in range(len(self.queues)) if healthy_p(i)]
+                qi = min(alive, key=lambda i: self.queues[i].queued_tokens)
+                self.queues[qi].push(seq)
+                start_prefill(qi, max(t, p_free[qi]))
+            elif kind == "poke_prefill":
+                start_prefill(payload, t)
+            elif kind == "dispatch_decode":
+                req, seq = payload
+                alive = [i for i in range(len(self.decode)) if healthy_d(i)]
+                di = min(alive, key=lambda i: len(d_active[i]) + len(d_ready[i]))
+                d_ready[di].append((req, seq))
+                start_decode(di, max(t, d_free[di]))
+            elif kind == "poke_decode":
+                start_decode(payload, t)
+            elif kind == "fail_decode":
+                idx = payload
+                lost = self.fail_decode(idx)
+                # failover: re-prefill lost requests (keep generated tokens)
+                for rid in lost:
+                    seq = seqs[rid]
+                    self.decode[idx].release(seq)
+                    seq.done = False
+                    alive = [i for i in range(len(self.queues)) if healthy_p(i)]
+                    qi = min(alive, key=lambda i: self.queues[i].queued_tokens)
+                    self.queues[qi].push(seq)
+                    push(t, "poke_prefill", qi)
+                # also re-route ready-but-unpulled requests
+                moved = d_ready[idx]
+                d_ready[idx] = []
+                for req, seq in moved:
+                    push(t, "dispatch_decode", (req, seq))
+        return results
+
+
+class ColocatedCluster:
+    """vLLM-like baseline: each engine runs prefill + decode interleaved
+    with prefill priority (iteration-level batching)."""
+
+    def __init__(self, cfg, params, *, n_engines: int = 1, max_batch: int = 8,
+                 max_len: int = 256, max_prefill_tokens: int = 512,
+                 attn_blocks=(64, 64)):
+        self.cfg = cfg
+        self.engines = [Engine(cfg, params, max_batch=max_batch,
+                               max_len=max_len, attn_blocks=attn_blocks)
+                        for _ in range(n_engines)]
+        self.max_prefill_tokens = max_prefill_tokens
+
+    def run(self, requests: List[Request]) -> Dict[int, ServedResult]:
+        rng = np.random.default_rng(0)
+        results: Dict[int, ServedResult] = {}
+        evq: List[Tuple[float, int, str, Any]] = []
+        ctr = itertools.count()
+
+        def push(t, kind, payload):
+            heapq.heappush(evq, (t, next(ctr), kind, payload))
+
+        waiting: List[List[Tuple[Request, Sequence]]] = [[] for _ in self.engines]
+        active: List[List[Sequence]] = [[] for _ in self.engines]
+        free_at = [0.0] * len(self.engines)
+
+        for r in requests:
+            toks = rng.integers(1, self.cfg.vocab_size, size=r.in_len).tolist()
+            s = Sequence(r.rid, toks, r.out_len)
+            s._req = r
+            push(r.arrive, "arrive", (r, s))
+
+        def _finish(req, seq, t):
+            req.finish = t
+            ttft = req.first_token - req.arrive
+            tpot = (req.finish - req.first_token) / max(seq.out_len - 1, 1)
+            results[req.rid] = ServedResult(req.rid, seq.tokens, ttft, tpot, t)
+
+        def step(i, now):
+            if free_at[i] > now:
+                return
+            e = self.engines[i]
+            if waiting[i] and e.has_slot():
+                req, seq = waiting[i].pop(0)
+                first, blob, dt = e.prefill_request(seq)
+                seq.tokens.append(first)
+                seq.produced += 1
+                req.first_token = now + dt
+                e.insert_kv(seq, blob)
+                if seq.produced >= seq.out_len:
+                    seq.done = True
+                    e.release(seq)
+                    _finish(req, seq, now + dt)
+                else:
+                    active[i].append(seq)
+                free_at[i] = now + dt
+                push(now + dt, "poke", i)
+                return
+            if active[i]:
+                dt = e.decode_step(active[i])
+                done_t = now + dt
+                still = []
+                for seq in active[i]:
+                    if seq.done:
+                        e.release(seq)
+                        _finish(seq._req, seq, done_t)
+                    else:
+                        still.append(seq)
+                active[i] = still
+                free_at[i] = done_t
+                push(done_t, "poke", i)
+
+        while evq:
+            t, _, kind, payload = heapq.heappop(evq)
+            if kind == "arrive":
+                r, s = payload
+                i = min(range(len(self.engines)),
+                        key=lambda j: len(waiting[j]) + len(active[j]))
+                waiting[i].append((r, s))
+                step(i, max(t, free_at[i]))
+            elif kind == "poke":
+                step(payload, t)
+        return results

@@ -1,0 +1,179 @@
+"""Live single-instance inference engine (CPU-runnable, TPU-shaped).
+
+Slot-based KV cache: `max_batch` slots x `max_len` tokens. Prefill runs
+per-request, right-padded to length buckets (bounded recompiles) — padding
+sits *after* the causal horizon and beyond `pos`, so it is never attended.
+Archs whose prefill carries running state through the sequence (SSM,
+hybrid, sliding-window ring packing) use exact lengths instead.
+
+Step times are measured and accumulated on a virtual clock so a 1-CPU host
+can emulate N concurrent instances honestly (used by the Table-2
+simulator-accuracy experiment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.api import build_model
+
+_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+@dataclasses.dataclass
+class Sequence:
+    rid: int
+    tokens: List[int]
+    out_len: int
+    slot: int = -1
+    produced: int = 0
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg, params=None, *, max_batch: int = 8,
+                 max_len: int = 512, seed: int = 0, attn_blocks=(128, 128),
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.dtype = dtype
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(seed))
+        self.params = self.model.cast(params, dtype)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.attn_blocks = attn_blocks
+        # exact-length prefill for state-carrying families
+        self.exact_len = (cfg.family in ("ssm", "hybrid", "encdec")
+                          or cfg.sliding_window > 0)
+        self.clock = 0.0                      # virtual seconds
+        self.steps = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self._cache = self._empty_cache()
+        self._slot_free = list(range(max_batch))
+        self._prefill_fn: Dict[int, Any] = {}
+
+        def _decode(params, cache, tokens):
+            return self.model.decode_step(params, cache, tokens)
+        self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
+
+    # ---- cache plumbing ------------------------------------------------
+    def _empty_cache(self):
+        specs = self.model.cache_specs(self.max_batch, self.max_len,
+                                       self.dtype)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+    def _get_prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_fn:
+            def _pf(params, toks):
+                mod = self.model
+                from ..models import api as _api
+                m = _api._mod(mod.cfg)
+                logits, cache, _ = m.forward(
+                    params, toks, mod.cfg, attn_blocks=self.attn_blocks,
+                    return_cache=True, max_len=self.max_len)
+                return logits, cache
+            self._prefill_fn[bucket] = jax.jit(_pf)
+        return self._prefill_fn[bucket]
+
+    # ---- public API -----------------------------------------------------
+    def has_slot(self) -> bool:
+        return bool(self._slot_free)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._slot_free)
+
+    def prefill_request(self, seq: Sequence) -> Tuple[int, Any, float]:
+        """Run prefill; returns (first_token, kv_blob, step_time)."""
+        toks = np.asarray(seq.tokens, np.int32)
+        S = len(toks)
+        assert S < self.max_len, (S, self.max_len)
+        if self.exact_len:
+            bucket = S
+        else:
+            bucket = next((b for b in _BUCKETS if S <= b), S)
+            bucket = min(max(bucket, S), self.max_len)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :S] = toks                                  # right-pad
+        fn = self._get_prefill_fn(bucket)
+        t0 = time.perf_counter()
+        logits, cache = fn(self.params, jnp.asarray(padded))
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        self.steps += 1
+        self.prefill_tokens += S
+        first = int(jnp.argmax(logits[0, S - 1]))
+        return first, (cache, S), dt
+
+    def kv_blob_bytes(self, kv_blob) -> int:
+        cache, _ = kv_blob
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+    def insert_kv(self, seq: Sequence, kv_blob) -> int:
+        """Install a transferred prefill cache into a free slot."""
+        cache, n_tok = kv_blob
+        slot = self._slot_free.pop(0)
+        seq.slot = slot
+
+        def merge(dst, src):
+            if dst.ndim == src.ndim:
+                for ax in range(dst.ndim):
+                    if (dst.shape[ax] == self.max_batch
+                            and src.shape[ax] == 1
+                            and dst.shape[:ax] == src.shape[:ax]):
+                        idx = [slice(None)] * dst.ndim
+                        idx[ax] = slot
+                        # sequence axes may be shorter in src (bucket < max)
+                        sl = tuple(slice(0, s) for s in src.shape)
+                        src_sq = jnp.squeeze(src[sl], axis=ax)
+                        grow = [slice(0, n) for n in src_sq.shape]
+                        full_idx = list(idx)
+                        j = 0
+                        for i2 in range(dst.ndim):
+                            if i2 == ax:
+                                continue
+                            full_idx[i2] = slice(0, src_sq.shape[j])
+                            j += 1
+                        return dst.at[tuple(full_idx)].set(src_sq.astype(dst.dtype))
+            return dst
+        self._cache = jax.tree.map(merge, self._cache, cache)
+        self._cache["pos"] = self._cache["pos"].at[slot].set(
+            jnp.asarray(n_tok, jnp.int32))
+        return slot
+
+    def release(self, seq: Sequence):
+        if seq.slot >= 0:
+            self._slot_free.append(seq.slot)
+            seq.slot = -1
+
+    def decode_step(self, seqs: List[Sequence]) -> float:
+        """One decode iteration for all active sequences."""
+        if not seqs:
+            return 0.0
+        tokens = np.zeros((self.max_batch,), np.int32)
+        for s in seqs:
+            tokens[s.slot] = s.tokens[-1]
+        t0 = time.perf_counter()
+        logits, self._cache = self._decode_fn(self.params, self._cache,
+                                              jnp.asarray(tokens))
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        self.steps += 1
+        self.decode_tokens += len(seqs)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s in seqs:
+            tok = int(nxt[s.slot])
+            s.tokens.append(tok)
+            s.produced += 1
+            if s.produced >= s.out_len:
+                s.done = True
+        return dt

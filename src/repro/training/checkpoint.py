@@ -1,0 +1,108 @@
+"""Sharded checkpointing without orbax: msgpack index + zstd-compressed
+raw tensor blobs, one file per (host-local) leaf. Restore re-shards onto
+whatever mesh is active — the elastic-rescale path (node failure or scale
+change restarts on a different topology from the same checkpoint).
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(f"{prefix}/{k}" if prefix else str(k), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}/{i}", v)
+        else:
+            flat[prefix] = node
+    rec("", tree)
+    return flat
+
+
+def save(path: str, step: int, params, opt_state=None,
+         extra: Optional[Dict] = None, level: int = 3):
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    index = {"step": int(step), "extra": extra or {}, "leaves": {}}
+    cctx = zstd.ZstdCompressor(level=level)
+    trees = {"params": params}
+    if opt_state is not None:
+        trees["opt"] = opt_state
+    for tname, tree in trees.items():
+        for key, leaf in _flatten(tree).items():
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"{tname}__{key.replace('/', '__')}.zst"
+            with open(os.path.join(tmp, fname), "wb") as f:
+                f.write(cctx.compress(arr.tobytes()))
+            index["leaves"][f"{tname}/{key}"] = {
+                "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "index.msgpack"), "wb") as f:
+        f.write(msgpack.packb(index))
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = [int(d.split("_")[-1]) for d in os.listdir(root)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, like_params, like_opt=None, shardings=None,
+            opt_shardings=None) -> Tuple[int, Any, Any, Dict]:
+    """Restore into the structure of `like_*` (ShapeDtypeStructs or arrays).
+    With `shardings`, leaves are placed sharded (elastic re-shard)."""
+    with open(os.path.join(path, "index.msgpack"), "rb") as f:
+        index = msgpack.unpackb(f.read())
+    dctx = zstd.ZstdDecompressor()
+
+    def load_tree(tname, like, shards):
+        flat_like = _flatten(like)
+        flat_shards = _flatten(shards) if shards is not None else None
+        out_flat = {}
+        for key, leaf in flat_like.items():
+            meta = index["leaves"][f"{tname}/{key}"]
+            with open(os.path.join(path, meta["file"]), "rb") as f:
+                raw = dctx.decompress(f.read())
+            arr = np.frombuffer(raw, dtype=meta["dtype"]).reshape(meta["shape"])
+            if flat_shards is not None and flat_shards.get(key) is not None:
+                out_flat[key] = jax.device_put(arr, flat_shards[key])
+            else:
+                out_flat[key] = jnp.asarray(arr)
+        return _unflatten(out_flat, like)
+
+    params = load_tree("params", like_params, shardings)
+    opt = None
+    if like_opt is not None:
+        opt = load_tree("opt", like_opt, opt_shardings)
+    return index["step"], params, opt, index.get("extra", {})
+
+
+def _unflatten(flat: Dict[str, Any], like) -> Any:
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}/{k}" if prefix else str(k), v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            vals = [rec(f"{prefix}/{i}", v) for i, v in enumerate(node)]
+            return type(node)(vals)
+        return flat[prefix]
+    return rec("", like)

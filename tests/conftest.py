@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; only the dry-run spawns the
+# 512-device placeholder topology (in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "float32")

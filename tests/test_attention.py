@@ -1,0 +1,77 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (decode_attend, dense_attention,
+                                    flash_reference)
+
+
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("gqa", [(8, 2), (4, 4), (8, 1)])
+def test_flash_reference_matches_dense(window, causal, gqa):
+    H, Hkv = gqa
+    if window and not causal:
+        pytest.skip("window implies causal")
+    B, S, hd = 2, 96, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    ref = dense_attention(q, k, v, causal=causal, window=window)
+    out = flash_reference(q, k, v, causal=causal, window=window,
+                          block_q=32, block_kv=32)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_reference_uneven_lengths():
+    B, S, H, hd = 1, 70, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, 96, H, hd))
+    v = jax.random.normal(ks[2], (B, 96, H, hd))
+    ref = dense_attention(q, k, v, causal=False)
+    out = flash_reference(q, k, v, causal=False, block_q=32, block_kv=32)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_reference_softcap():
+    B, S, H, hd = 2, 64, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, 2, hd))
+    v = jax.random.normal(ks[2], (B, S, 2, hd))
+    ref = dense_attention(q, k, v, causal=True, logit_softcap=20.0)
+    out = flash_reference(q, k, v, causal=True, logit_softcap=20.0,
+                          block_q=16, block_kv=16)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+def test_decode_attend_masks_by_length():
+    B, S, H, Hkv, hd = 2, 48, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    lens = jnp.array([13, 48])
+    out = decode_attend(q, k, v, lens)
+    for b in range(B):
+        ref = dense_attention(q[b:b + 1, None], k[b:b + 1, :lens[b]],
+                              v[b:b + 1, :lens[b]], causal=False)
+        np.testing.assert_allclose(out[b], ref[0, 0], atol=3e-5, rtol=3e-5)
+
+
+def test_decode_attend_ignores_tail_garbage():
+    """Tokens beyond `lens` must not affect the output (engine invariant)."""
+    B, S, H, hd = 1, 32, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    lens = jnp.array([10])
+    out1 = decode_attend(q, k, v, lens)
+    k2 = k.at[:, 10:].set(999.0)
+    v2 = v.at[:, 10:].set(-999.0)
+    out2 = decode_attend(q, k2, v2, lens)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)

@@ -1,0 +1,70 @@
+"""Fault-tolerance + replanning unit behaviour."""
+import numpy as np
+
+from repro.core.fault import (HeartbeatMonitor, SchedulerCheckpoint,
+                              plan_failover)
+from repro.core.replan import WorkloadProfiler, Replanner, drifted
+from repro.core.workload import Request, SHAREGPT, sample_requests
+
+
+def test_heartbeat_sweep_marks_dead():
+    t = [0.0]
+    mon = HeartbeatMonitor(timeout=1.0, now=lambda: t[0])
+    mon.register("a")
+    mon.register("b")
+    t[0] = 0.5
+    mon.beat("a")
+    t[0] = 1.2
+    dead = mon.sweep()
+    assert dead == ["b"]
+    assert mon.alive_ids() == {"a"}
+    mon.beat("b")           # rejoin (elastic)
+    assert mon.alive_ids() == {"a", "b"}
+
+
+def test_failover_plan_policies():
+    p = plan_failover("prefill", queued=[1, 2], running=[], parked=[3])
+    assert p.redispatch == [1, 2] and p.reprefill == [3]
+    d = plan_failover("decode", queued=[], running=[4, 5], parked=[])
+    assert d.reprefill == [4, 5] and d.redispatch == []
+
+
+def test_scheduler_checkpoint_roundtrip():
+    state = {"queue": [1, 2, 3], "dispatch": {"1": "prefill0"}}
+    raw = SchedulerCheckpoint.dump(state)
+    assert SchedulerCheckpoint.load(raw) == state
+
+
+def test_profiler_and_drift():
+    prof = WorkloadProfiler()
+    for r in sample_requests(SHAREGPT, 5.0, 128, seed=0):
+        prof.observe(r)
+    s1 = prof.stats()
+    assert s1 is not None and abs(s1.rate - 5.0) / 5.0 < 0.4
+    s2 = type(s1)(rate=s1.rate * 2, mean_in=s1.mean_in,
+                  mean_out=s1.mean_out, n=s1.n)
+    assert drifted(s1, s2)
+    s3 = type(s1)(rate=s1.rate * 1.05, mean_in=s1.mean_in,
+                  mean_out=s1.mean_out, n=s1.n)
+    assert not drifted(s1, s3)
+
+
+def test_replanner_triggers_on_shift():
+    calls = []
+
+    def search(spec, rate):
+        calls.append((spec.name, rate))
+        return "placement"
+
+    rp = Replanner(search, slo_ttft=0.2, slo_tpot=0.05, check_every=64)
+    for r in sample_requests(SHAREGPT, 2.0, 128, seed=1):
+        rp.observe(r)
+    assert rp.baseline is not None
+    # shift: 5x the rate (arrivals compressed)
+    shifted = sample_requests(SHAREGPT, 10.0, 256, seed=2)
+    t0 = rp.profiler.window[-1].arrive
+    for r in shifted:
+        r.arrive += t0
+        rp.observe(r)
+    assert rp.replans >= 1
+    assert rp.current_placement == "placement"

@@ -1,0 +1,57 @@
+"""Placement algorithms (paper Alg. 1 / Alg. 2) and goodput search."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.core.goodput import max_goodput, min_slo_scale
+from repro.core.latency_model import LatencyModel, Parallelism
+from repro.core.placement import (algo1_high_affinity, algo2_low_affinity,
+                                  vllm_pp_search, _fits)
+from repro.core.simulator import InstanceConfig, simulate_colocated
+from repro.core.workload import SHAREGPT, derive_slos
+
+CFG = get_config("yi-6b")
+LM = LatencyModel(CFG, hw.V5E)
+SPEC = derive_slos(SHAREGPT, LM)
+
+
+def test_algo1_returns_feasible_placement():
+    pl = algo1_high_affinity(LM, SPEC, rate=20, n_node=1, m_per_node=8,
+                             n_requests=200)
+    assert pl.prefill.goodput_per_chip > 0
+    assert pl.decode.goodput_per_chip > 0
+    assert pl.n_prefill >= 1 and pl.n_decode >= 1
+    assert _fits(LM, pl.prefill.par, hw.V5E)
+    assert _fits(LM, pl.decode.par, hw.V5E)
+    # replication sized to meet the requested rate
+    assert (pl.prefill.goodput_per_chip * pl.prefill.par.num_chips
+            * pl.n_prefill) >= 20 * 0.99
+
+
+def test_algo2_respects_node_capacity():
+    pl = algo2_low_affinity(LM, SPEC, rate=10, n_node=1, m_per_node=8,
+                            n_requests=200)
+    assert (pl.prefill.par.tp + pl.decode.par.tp) <= 8
+    assert pl.n_prefill == pl.n_decode  # paired segments
+
+
+def test_vllm_pp_search_finds_config():
+    par, g = vllm_pp_search(LM, SPEC, rate=10, n_node=1, m_per_node=8,
+                            n_requests=200)
+    assert g > 0
+    assert _fits(LM, par, hw.V5E)
+
+
+def test_goodput_monotone_in_slo_scale():
+    def run(reqs):
+        return simulate_colocated(reqs, LM, InstanceConfig(Parallelism(2, 1), 1))
+    tight = max_goodput(run, SPEC, 2, slo_scale=0.5, n_requests=200)
+    loose = max_goodput(run, SPEC, 2, slo_scale=2.0, n_requests=200)
+    assert loose.rate >= tight.rate
+
+
+def test_min_slo_scale_bracket():
+    def run(reqs):
+        return simulate_colocated(reqs, LM, InstanceConfig(Parallelism(2, 1), 1))
+    s = min_slo_scale(run, SPEC, rate=1.0, n_requests=200)
+    assert 0.05 <= s <= 8.0

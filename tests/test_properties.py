@@ -1,0 +1,146 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import hypothesis.strategies as st
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.core.latency_model import LatencyModel, Parallelism
+from repro.core.scheduler import FCFSQueue, least_loaded, shortest_queue
+from repro.core.kv_transfer import kv_bytes
+
+CFG = get_config("yi-6b")
+LM = LatencyModel(CFG, hw.V5E)
+MOE = get_config("mixtral-8x22b")
+SSM = get_config("mamba2-2.7b")
+
+
+# ---------------- latency model ------------------------------------------
+
+@given(st.integers(16, 8192), st.integers(16, 8192))
+@settings(max_examples=40, deadline=None)
+def test_prefill_time_monotone_in_tokens(a, b):
+    lo, hi = sorted((a, b))
+    par = Parallelism(1, 1)
+    assert LM.prefill_time([lo], par) <= LM.prefill_time([hi], par) + 1e-12
+
+
+@given(st.integers(1, 512), st.integers(1, 512), st.integers(0, 20))
+@settings(max_examples=40, deadline=None)
+def test_decode_time_monotone_in_batch_and_ctx(b1, b2, ctx_k):
+    lo, hi = sorted((b1, b2))
+    par = Parallelism(1, 1)
+    ctx = ctx_k * 1024
+    assert (LM.decode_time(lo, ctx, par)
+            <= LM.decode_time(hi, ctx, par) + 1e-12)
+    assert (LM.decode_time(lo, ctx, par)
+            <= LM.decode_time(lo, ctx + 4096, par) + 1e-12)
+
+
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(64, 4096))
+@settings(max_examples=30, deadline=None)
+def test_tp_never_slows_prefill(tp, tokens):
+    t1 = LM.prefill_time([tokens], Parallelism(1, 1))
+    t2 = LM.prefill_time([tokens], Parallelism(tp, 1))
+    assert t2 <= t1 * 1.05
+
+
+@given(st.integers(1, 64), st.integers(128, 32768))
+@settings(max_examples=30, deadline=None)
+def test_moe_active_params_bounded(batch, _):
+    full = MOE.num_params() * 2
+    active = LatencyModel(MOE, hw.V5E).active_param_bytes(batch)
+    assert active <= full * 1.001
+    assert active >= full * 0.05
+
+
+@given(st.integers(1, 32768))
+@settings(max_examples=30, deadline=None)
+def test_kv_bytes_families(prompt):
+    dense = kv_bytes(get_config("phi3-medium-14b"), prompt)
+    assert dense == get_config("phi3-medium-14b").kv_bytes_per_token() * prompt
+    # SSM state is constant in prompt length
+    assert kv_bytes(SSM, prompt) == kv_bytes(SSM, 1)
+    # SWA caps at the window
+    mix = get_config("mixtral-8x22b")
+    assert kv_bytes(mix, prompt) <= kv_bytes(mix, mix.sliding_window)
+
+
+# ---------------- scheduler ----------------------------------------------
+
+@given(st.lists(st.integers(1, 2000), min_size=1, max_size=40),
+       st.integers(64, 4096))
+@settings(max_examples=60, deadline=None)
+def test_fcfs_batch_budget_and_order(lens, budget):
+    q = FCFSQueue(token_of=lambda x: x[1])
+    for i, l in enumerate(lens):
+        q.push((i, l))
+    seen = []
+    while len(q):
+        batch = q.form_batch(budget)
+        assert batch, "batch never empty while queue nonempty"
+        tok = sum(b[1] for b in batch)
+        # only an oversized head may exceed the budget, and then alone
+        if tok > budget:
+            assert len(batch) == 1
+        seen.extend(b[0] for b in batch)
+    assert seen == sorted(seen), "FCFS order must be preserved"
+
+
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=16))
+@settings(max_examples=40, deadline=None)
+def test_least_loaded_picks_min(loads):
+    assert loads[least_loaded(loads)] == min(loads)
+
+
+# ---------------- checkpoint roundtrip (randomized trees) -----------------
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_roundtrip_random(seed):
+    import tempfile
+    import jax.numpy as jnp
+    from repro.training import checkpoint as ckpt
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=(3, 5)).astype(np.float32)),
+            "b": {"c": jnp.asarray(rng.integers(0, 10, (4,), dtype=np.int32)),
+                  "d": jnp.asarray(rng.normal(size=(2, 2)).astype(np.float32))}}
+    with tempfile.TemporaryDirectory() as td:
+        ckpt.save(f"{td}/step_1", 1, tree)
+        step, restored, _, _ = ckpt.restore(f"{td}/step_1", tree)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------- partitioning rules --------------------------------------
+
+@given(st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 16, 32, 48, 64, 100,
+                                 128, 256, 1024]),
+                min_size=1, max_size=4))
+@settings(max_examples=60, deadline=None)
+def test_partition_rules_valid_specs(dims):
+    """Resolved specs never shard a non-divisible dim and never reuse a
+    mesh axis within one spec."""
+    from repro.launch.partitioning import make_rules
+    import jax as _jax
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    rules = make_rules(FakeMesh(), "train")
+    logical = ["batch", "embed", "mlp", "heads"][: len(dims)]
+    spec = rules.resolve(logical, dims)
+    used = []
+    for entry, dim in zip(tuple(spec) + (None,) * (len(dims) - len(spec)), dims):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = math.prod(FakeMesh.shape[a] for a in axes)
+        assert dim % size == 0
+        for a in axes:
+            assert a not in used
+            used.append(a)

@@ -1,0 +1,106 @@
+"""Simulator validation, including the paper's M/D/1 queueing model (Eq. 1)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.core.latency_model import LatencyModel, Parallelism
+from repro.core.simulator import (InstanceConfig, simulate_colocated,
+                                  simulate_disaggregated, summarize)
+from repro.core.workload import (SHAREGPT, Request, WorkloadSpec, derive_slos,
+                                 sample_requests)
+
+CFG = get_config("yi-6b")
+LM = LatencyModel(CFG, hw.V5E)
+
+
+def _uniform_requests(rate, n, in_len, seed=0):
+    rng = np.random.default_rng(seed)
+    arrive = np.cumsum(rng.exponential(1.0 / rate, n))
+    return [Request(i, float(arrive[i]), in_len, 1) for i in range(n)]
+
+
+@pytest.mark.parametrize("util", [0.3, 0.6, 0.8])
+def test_md1_queue_matches_closed_form(util):
+    """Paper Eq. 1: Avg_TTFT = D + R D^2 / (2 (1 - R D)) for uniform
+    prompts, FCFS, no batching."""
+    par = Parallelism(1, 1)
+    L = 512
+    D = LM.prefill_time([L], par)
+    rate = util / D
+    reqs = _uniform_requests(rate, 3000, L)
+    reqs, _ = simulate_disaggregated(
+        reqs, LM, InstanceConfig(par, 1), InstanceConfig(par, 1),
+        lm_tokens=L,  # budget == one request -> no batching
+        phase="prefill")
+    ttfts = [r.ttft for r in reqs if r.finish >= 0]
+    avg = float(np.mean(ttfts))
+    expect = D + rate * D * D / (2 * (1 - rate * D))
+    assert avg == pytest.approx(expect, rel=0.12), (avg, expect)
+
+
+def test_all_requests_finish():
+    spec = derive_slos(SHAREGPT, LM)
+    reqs = sample_requests(spec, 5.0, 200, seed=1)
+    reqs, _ = simulate_disaggregated(
+        reqs, LM, InstanceConfig(Parallelism(2, 1), 1),
+        InstanceConfig(Parallelism(2, 1), 1))
+    assert all(r.finish >= 0 for r in reqs)
+    assert all(r.first_token >= r.arrive for r in reqs)
+    assert all(r.finish >= r.first_token for r in reqs)
+
+
+def test_colocated_all_finish_and_interference():
+    """Adding prefill load must slow decode (paper Fig. 2 direction)."""
+    spec = derive_slos(SHAREGPT, LM)
+    par = Parallelism(2, 1)
+    lo = sample_requests(spec, 1.0, 120, seed=2)
+    hi = sample_requests(spec, 20.0, 400, seed=2)
+    lo, _ = simulate_colocated(lo, LM, InstanceConfig(par, 1))
+    hi, _ = simulate_colocated(hi, LM, InstanceConfig(par, 1))
+    r_lo = summarize(lo, spec)
+    r_hi = summarize(hi, spec)
+    assert all(r.finish >= 0 for r in hi)
+    assert r_hi.p90_tpot > r_lo.p90_tpot  # interference grows with load
+
+
+def test_disagg_beats_colocated_at_reference_setting():
+    """The paper's headline direction under stringent SLOs."""
+    from repro.core.goodput import max_goodput
+    spec = derive_slos(SHAREGPT, LM)
+
+    def colo(reqs):
+        return simulate_colocated(reqs, LM, InstanceConfig(Parallelism(2, 1), 4))
+
+    def disagg(reqs):
+        return simulate_disaggregated(
+            reqs, LM, InstanceConfig(Parallelism(4, 1), 1),
+            InstanceConfig(Parallelism(2, 1), 2), transfer_bw=50e9)
+
+    g_colo = max_goodput(colo, spec, 8, n_requests=300)
+    g_dis = max_goodput(disagg, spec, 8, n_requests=300)
+    assert g_dis.per_chip > 1.5 * g_colo.per_chip
+
+
+def test_decode_phase_tpot_flat_with_pp():
+    """PP scales decode throughput; TPOT stays near the microbatch time."""
+    spec = derive_slos(SHAREGPT, LM)
+    reqs = sample_requests(spec, 4.0, 200, seed=3)
+    reqs, _ = simulate_disaggregated(
+        reqs, LM, InstanceConfig(Parallelism(2, 1), 2),
+        InstanceConfig(Parallelism(2, 2), 1), phase="both")
+    res = summarize(reqs, spec)
+    assert res.p90_tpot < spec.slo_tpot * 2
+
+
+def test_kv_transfer_accounting():
+    spec = derive_slos(SHAREGPT, LM)
+    reqs = sample_requests(spec, 2.0, 100, seed=4)
+    reqs, extras = simulate_disaggregated(
+        reqs, LM, InstanceConfig(Parallelism(2, 1), 1),
+        InstanceConfig(Parallelism(2, 1), 1), transfer_bw=50e9)
+    assert extras["kv_total"] > 0
+    # paper Fig. 10: transfer is a tiny fraction of total processing
+    total_busy = extras["breakdown"]["prefill_busy_s"] + \
+        extras["breakdown"]["decode_busy_s"]
+    assert extras["kv_total"] < 0.05 * total_busy
