@@ -1,0 +1,64 @@
+"""Paged-KV runtime microbenchmarks (live engines, smoke-size on CPU).
+
+Measures what the paged refactor is for:
+  * insert cost: block-table splice into the page pool vs the dense
+    full-slab merge, per prompt length (the splice should stay flat-ish;
+    the slab merge rewrites max_batch x max_len every insert).
+  * burst backpressure: a page-starved decode instance must park finished
+    prefills on the prefill side and drain them as pages free.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.workload import Request
+from repro.models.api import build_model
+from repro.serving.cluster import DisaggCluster
+from repro.serving.engine import Engine, Sequence
+
+from .common import emit, timed
+
+
+def _insert_cost(eng: Engine, in_len: int, reps: int = 5) -> float:
+    rng = np.random.default_rng(0)
+    times = []
+    for rep in range(reps):
+        s = Sequence(rep, rng.integers(1, eng.cfg.vocab_size,
+                                       in_len).tolist(), 8)
+        first, blob, _ = eng.prefill_request(s)
+        s.tokens.append(first)
+        s.produced += 1
+        def ins():
+            eng.insert_kv(s, blob)
+            jax.block_until_ready(eng._cache)   # count device work, not
+                                                # just async dispatch
+        _, us = timed(ins)
+        times.append(us)
+        eng.release(s)
+    return float(np.median(times))
+
+
+def run(arch: str = "yi-6b-smoke", in_lens=(12, 28, 60)):
+    cfg = get_config(arch)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    paged = Engine(cfg, params, max_batch=8, max_len=128, page_size=16)
+    dense = Engine(cfg, params, max_batch=8, max_len=128, paged=False)
+    for L in in_lens:
+        us_p = _insert_cost(paged, L)
+        us_d = _insert_cost(dense, L)
+        emit(f"paged_kv.insert.L{L}", us_p,
+             f"dense_us={us_d:.1f};pages={paged._kv.pages_for(L)};"
+             f"speedup={us_d / max(us_p, 1e-9):.2f}x")
+
+    # burst backpressure on a starved pool (4 pages/seq, 4 resident)
+    reqs = [Request(i, i * 0.001, 10, 5) for i in range(8)]
+    dc = DisaggCluster(cfg, params, n_prefill=1, n_decode=1, max_batch=8,
+                       max_len=64, lm_tokens=48, page_size=4,
+                       decode_num_pages=17)
+    (_, us) = timed(dc.run, reqs)
+    emit("paged_kv.backpressure", us,
+         f"parked_peak_bytes={dc.tx.peak_parked_bytes};"
+         f"peak_pages={dc.decode[0]._kv.peak_used_pages};"
+         f"chunks={dc.tx.total_chunks}")

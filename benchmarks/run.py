@@ -13,12 +13,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig4,fig8,fig9,fig11,fig12,"
-                         "table2,roofline")
+                         "table2,roofline,paged_kv")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import fig1, fig2, fig4, fig8, fig11, fig12, roofline, table2
+    from . import (fig1, fig2, fig4, fig8, fig11, fig12, paged_kv, roofline,
+                   table2)
     from .common import emit
 
     n_req = 150 if args.quick else 250
@@ -49,6 +50,8 @@ def main() -> None:
         jobs.append(("fig12", lambda: fig12.run()))
     if not only or "table2" in only:
         jobs.append(("table2", lambda: table2.run()))
+    if not only or "paged_kv" in only:
+        jobs.append(("paged_kv", lambda: paged_kv.run()))
     if not only or "roofline" in only:
         jobs.append(("roofline", roofline.run))
 

@@ -1,16 +1,23 @@
-"""Pull-based KV-cache migration (paper §4.3 "combat burstiness" + §3.3).
+"""Pull-based, block-granular KV-cache migration (paper §4.3 "combat
+burstiness" + §3.3).
 
 The prefill instance's HBM acts as the queuing buffer: finished prefills
-park there; the decode instance *pulls* a request's KV only when it has a
-free slot and capacity, so bursts never overload decode memory. Transfers
-are layerwise and sized from the model config (GQA-aware; SSM archs move a
-constant-size state instead of per-token KV).
+park there; the decode instance *pulls* a request's KV only when it has
+free pages, so bursts never overload decode memory. Transfers move in
+page-sized chunks over a dedicated link per prefill→decode pair (each pair
+has its own `_link_free_at` serialization point; different pairs proceed in
+parallel). Per-request wire time is accounted layer-wise: the last layer's
+chunk completes at `start + nbytes/bw`, and the *exposed* latency before
+decode can start attending is one layer's worth less when layer transfers
+overlap the decode engine's per-layer compute (tracked in
+`layer_overlap_s`). Sizes come from the model config (GQA-aware; SSM archs
+move a constant-size state instead of per-token KV).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import math
+from typing import Any, Dict, List, Optional, Tuple
 
 
 def kv_bytes(cfg, prompt_len: int, dtype_bytes: int = 2) -> int:
@@ -37,33 +44,62 @@ class ParkedKV:
     blob: Any
     nbytes: int
     parked_at: float
+    src: int = 0                    # prefill instance holding the pages
+    wire_s: Optional[float] = None  # override nbytes/bandwidth (e.g. an
+                                    # empirically calibrated transfer time)
 
 
 class TransferManager:
-    """Tracks parked KV on prefill side + models per-link wire time."""
+    """Parked KV on the prefill side + per-link wire-time model.
 
-    def __init__(self, bandwidth: float, track_wall: bool = False):
+    One serialization point per (src prefill, dst decode) link; transfers
+    are chunked into `page_bytes` blocks and `n_layers` layer slices for
+    accounting.
+    """
+
+    def __init__(self, bandwidth: float, *, page_bytes: Optional[int] = None,
+                 n_layers: int = 1, track_wall: bool = False):
         self.bandwidth = bandwidth
+        self.page_bytes = page_bytes
+        self.n_layers = max(n_layers, 1)
         self.track_wall = track_wall
         self.parked: Dict[int, ParkedKV] = {}
         self.total_bytes = 0
+        self.total_chunks = 0
         self.total_time = 0.0
+        self.layer_overlap_s = 0.0      # wire time hidable under per-layer
+                                        # decode compute (all but one layer)
         self.times: List[float] = []
-        self._link_free_at = 0.0            # serialize per link
+        self.peak_parked_bytes = 0
+        self._link_free_at: Dict[Tuple[int, int], float] = {}
 
-    def park(self, rid: int, blob: Any, nbytes: int, now: float):
-        self.parked[rid] = ParkedKV(rid, blob, nbytes, now)
+    def park(self, rid: int, blob: Any, nbytes: int, now: float, src: int = 0,
+             wire_s: Optional[float] = None):
+        self.parked[rid] = ParkedKV(rid, blob, nbytes, now, src, wire_s)
+        self.peak_parked_bytes = max(self.peak_parked_bytes,
+                                     self.parked_bytes())
 
     def parked_bytes(self) -> int:
         return sum(p.nbytes for p in self.parked.values())
 
-    def pull(self, rid: int, now: float) -> Tuple[Any, float]:
-        """Decode side pulls; returns (blob, completion_time)."""
+    def chunks_for(self, nbytes: int) -> int:
+        if nbytes <= 0:
+            return 0
+        if not self.page_bytes:
+            return 1
+        return math.ceil(nbytes / self.page_bytes)
+
+    def pull(self, rid: int, now: float, dst: int = 0) -> Tuple[Any, float]:
+        """Decode side pulls; returns (blob, completion_time). The wire is
+        occupied per (src, dst) link; other links proceed in parallel."""
         p = self.parked.pop(rid)
-        start = max(now, self._link_free_at)
-        dt = p.nbytes / self.bandwidth
-        self._link_free_at = start + dt
+        link = (p.src, dst)
+        start = max(now, self._link_free_at.get(link, 0.0))
+        dt = p.wire_s if p.wire_s is not None else p.nbytes / self.bandwidth
+        self._link_free_at[link] = start + dt
         self.total_bytes += p.nbytes
+        self.total_chunks += self.chunks_for(p.nbytes)
         self.total_time += dt
+        self.layer_overlap_s += dt * (self.n_layers - 1) / self.n_layers
         self.times.append(dt)
         return p.blob, start + dt

@@ -1,5 +1,6 @@
-"""Runtime scheduling policies (paper §4.3), shared by the simulator and
-the live cluster runtime.
+"""Runtime scheduling core (paper §4.3), shared by the discrete-event
+simulator (`core.simulator`) and the live cluster runtime
+(`serving.cluster`). One implementation of:
 
 - FCFS central queue, dispatch to the prefill instance with the shortest
   queue (by queued tokens).
@@ -7,11 +8,23 @@ the live cluster runtime.
   prompts together, schedule longer-than-L_m prompts alone (reduces
   pipeline bubbles from non-uniform lengths).
 - Decode dispatch to the least-loaded decode instance.
+- Pull-based admission against *page* availability (`PagePool`): finished
+  prefills stay parked on the prefill side until the decode instance has
+  free KV pages, so bursts never overload decode memory (§4.3 "combat
+  burstiness").
+
+`DisaggDispatcher` records every dispatch decision, so tests can assert
+that the simulator and the live cluster make identical choices on the same
+arrival trace. `EventLoop` is the shared heapq event queue both drivers
+run on.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Generic, List, Optional, Sequence, TypeVar
+import heapq
+import itertools
+from typing import (Any, Callable, Dict, Generic, List, Optional, Sequence,
+                    Tuple, TypeVar)
 
 T = TypeVar("T")
 
@@ -20,38 +33,149 @@ T = TypeVar("T")
 class FCFSQueue(Generic[T]):
     token_of: Callable[[T], int]
     items: List[T] = dataclasses.field(default_factory=list)
+    _tokens: int = 0                    # incremental sum over items
 
     def push(self, item: T):
         self.items.append(item)
+        self._tokens += self.token_of(item)
 
     @property
     def queued_tokens(self) -> int:
-        return sum(self.token_of(x) for x in self.items)
+        return self._tokens
 
     def __len__(self):
         return len(self.items)
 
-    def form_batch(self, budget: int, max_batch: Optional[int] = None) -> List[T]:
+    def form_batch(self, budget: int, max_batch: Optional[int] = None,
+                   can_take: Optional[Callable[[T], bool]] = None) -> List[T]:
         """Paper §4.3: total new tokens per batch ~ L_m; oversized prompts
         go alone; FCFS order preserved (no reordering — convoy effects are
-        accepted, preemption is future work per the paper)."""
+        accepted, preemption is future work per the paper).
+
+        `can_take` gates admission per item (e.g. KV-page availability);
+        it is consulted exactly once per accepted item, in FCFS order, so
+        stateful predicates that reserve capacity on True are safe.
+        """
         if not self.items:
+            return []
+        if can_take is not None and not can_take(self.items[0]):
             return []
         batch = [self.items.pop(0)]
         tok = self.token_of(batch[0])
         while self.items and tok + self.token_of(self.items[0]) <= budget:
             if max_batch and len(batch) >= max_batch:
                 break
+            if can_take is not None and not can_take(self.items[0]):
+                break
             nxt = self.items.pop(0)
             tok += self.token_of(nxt)
             batch.append(nxt)
+        self._tokens -= tok
         return batch
 
 
-def shortest_queue(queues: Sequence[FCFSQueue]) -> int:
-    """Index of the prefill queue with the fewest queued tokens."""
-    return min(range(len(queues)), key=lambda i: queues[i].queued_tokens)
+def shortest_queue(queues: Sequence[FCFSQueue],
+                   alive: Optional[Sequence[int]] = None) -> int:
+    """Index of the prefill queue with the fewest queued tokens (ties break
+    to the lowest index, deterministically)."""
+    cand = range(len(queues)) if alive is None else alive
+    return min(cand, key=lambda i: queues[i].queued_tokens)
 
 
-def least_loaded(loads: Sequence[int]) -> int:
-    return min(range(len(loads)), key=lambda i: loads[i])
+def least_loaded(loads: Sequence[float],
+                 alive: Optional[Sequence[int]] = None) -> int:
+    cand = range(len(loads)) if alive is None else alive
+    return min(cand, key=lambda i: loads[i])
+
+
+@dataclasses.dataclass
+class DisaggDispatcher:
+    """Records the dispatch decisions of the shared policies.
+
+    Both the simulator and the live cluster route arrivals and KV handoffs
+    through one dispatcher, so a test can replay the same trace on both and
+    diff `decisions` entry-by-entry.
+    """
+    decisions: List[Tuple[str, int, int]] = dataclasses.field(
+        default_factory=list)
+
+    def pick_prefill(self, rid: int, queues: Sequence[FCFSQueue],
+                     alive: Optional[Sequence[int]] = None) -> int:
+        idx = shortest_queue(queues, alive)
+        self.decisions.append(("prefill", rid, idx))
+        return idx
+
+    def pick_decode(self, rid: int, loads: Sequence[float],
+                    alive: Optional[Sequence[int]] = None) -> int:
+        idx = least_loaded(loads, alive)
+        self.decisions.append(("decode", rid, idx))
+        return idx
+
+    def by_rid(self) -> Dict[int, Dict[str, int]]:
+        out: Dict[int, Dict[str, int]] = {}
+        for kind, rid, idx in self.decisions:
+            out.setdefault(rid, {})[kind] = idx
+        return out
+
+
+class EventLoop:
+    """Heapq event queue with a monotone tie-breaking counter (insertion
+    order wins among same-time events — arrivals dispatch before pokes)."""
+
+    def __init__(self):
+        self._q: List[Tuple[float, int, str, Any]] = []
+        self._ctr = itertools.count()
+        self.now = 0.0
+
+    def push(self, t: float, kind: str, payload: Any = None):
+        heapq.heappush(self._q, (t, next(self._ctr), kind, payload))
+
+    def pop(self) -> Tuple[float, str, Any]:
+        t, _, kind, payload = heapq.heappop(self._q)
+        self.now = t
+        return t, kind, payload
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class PagePool:
+    """Block-granular KV capacity accounting (the scheduler-side view of a
+    paged KV cache: capacity is a page count, admission is page-granular).
+
+    `unit` is the token (or byte) capacity of one page; `pages_for`
+    converts a demand in those units to whole pages (ceil).
+    """
+
+    def __init__(self, num_pages: int, unit: float = 1.0):
+        assert num_pages >= 0 and unit > 0
+        self.num_pages = int(num_pages)
+        self.unit = float(unit)
+        self._alloc: Dict[int, int] = {}
+        self.used = 0
+        self.peak_used = 0
+
+    def pages_for(self, demand: float) -> int:
+        return max(int(-(-demand // self.unit)), 1)
+
+    @property
+    def free_pages(self) -> int:
+        return self.num_pages - self.used
+
+    def can_alloc(self, n_pages: int) -> bool:
+        return n_pages <= self.free_pages
+
+    def alloc(self, rid: int, n_pages: int):
+        assert rid not in self._alloc, rid
+        assert self.can_alloc(n_pages), (rid, n_pages, self.free_pages)
+        self._alloc[rid] = n_pages
+        self.used += n_pages
+        self.peak_used = max(self.peak_used, self.used)
+
+    def free(self, rid: int) -> int:
+        n = self._alloc.pop(rid)
+        self.used -= n
+        return n

@@ -1,13 +1,16 @@
 """Discrete-event simulator for disaggregated and colocated LLM serving.
 
-Iteration-level fidelity, mirroring the runtime in repro/serving:
-  * prefill instances: FCFS queues, batch formation up to the L_m token
-    budget (paper §4.3), PP admission every T/pp with full-T latency
+Iteration-level fidelity, mirroring the runtime in repro/serving — batch
+formation, dispatch, and pull-based admission all come from the shared
+scheduler core in `core.scheduler` (the live cluster runs the same code):
+  * prefill instances: FCFS queues (`FCFSQueue.form_batch` up to the L_m
+    token budget, paper §4.3), PP admission every T/pp with full-T latency
     (M/D/1-consistent), shortest-queue dispatch at arrival.
   * decode instances: continuous batching; per-iteration time from the
-    analytical latency model; KV-capacity admission (pull-based transfer —
-    requests stay buffered on the prefill side until the decode instance
-    has room, paper §4.3 "combat burstiness").
+    analytical latency model; *page-granular* KV admission via `PagePool` —
+    finished prefills stay parked on the prefill side (`TransferManager`)
+    until the decode instance has free pages, then transfer over the
+    per-link wire (paper §4.3 "combat burstiness").
   * colocated engine (vLLM-like baseline): prefill-priority iteration-level
     scheduling, decode stalls during prefill iterations (the interference
     the paper measures in Fig. 1/2).
@@ -15,11 +18,12 @@ Iteration-level fidelity, mirroring the runtime in repro/serving:
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 from typing import Dict, List, Optional, Tuple
 
+from .kv_transfer import TransferManager, kv_bytes
 from .latency_model import LatencyModel, Parallelism
+from .scheduler import (DisaggDispatcher, EventLoop, FCFSQueue, PagePool,
+                        least_loaded)
 from .workload import Request, WorkloadSpec
 
 
@@ -45,11 +49,17 @@ class SimResult:
 
 
 def _percentile(xs: List[float], q: float) -> float:
+    """Linear-interpolated percentile (numpy's default 'linear' method)."""
     if not xs:
         return 0.0
     xs = sorted(xs)
-    i = min(int(q * len(xs)), len(xs) - 1)
-    return xs[i]
+    if len(xs) == 1:
+        return xs[0]
+    pos = q * (len(xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
 
 
 def summarize(reqs: List[Request], spec: WorkloadSpec,
@@ -95,54 +105,55 @@ class _PrefillInstance:
         self.lm = lm
         self.par = par
         self.budget = lm_tokens
-        self.queue: List[Request] = []
+        self.queue: FCFSQueue = FCFSQueue(token_of=lambda r: r.in_len)
         self.inflight = 0            # batches in the pipeline
         self.next_admit = 0.0
-        self.queued_tokens = 0
 
-    def can_admit(self, now: float) -> bool:
-        return self.queue and self.inflight < self.par.pp
+    @property
+    def queued_tokens(self) -> int:
+        return self.queue.queued_tokens
+
+    def can_admit(self) -> bool:
+        return bool(self.queue.items) and self.inflight < self.par.pp
 
     def form_batch(self) -> List[Request]:
-        batch = [self.queue.pop(0)]
-        tok = batch[0].in_len
-        while self.queue and tok + self.queue[0].in_len <= self.budget:
-            r = self.queue.pop(0)
-            tok += r.in_len
-            batch.append(r)
-        self.queued_tokens -= tok
-        return batch
+        return self.queue.form_batch(self.budget)
+
+
+def _req_kv_bytes(lm: LatencyModel, r: Request) -> float:
+    c = lm.cfg
+    if c.family == "ssm":
+        return lm.kv_read_bytes(0)
+    n = r.in_len + r.out_len
+    if c.sliding_window:
+        n = min(n, c.sliding_window)
+    return c.kv_bytes_per_token(lm.dtype_bytes) * n
 
 
 class _DecodeInstance:
     def __init__(self, iid, lm: LatencyModel, par: Parallelism,
-                 kv_capacity: float, max_batch: int):
+                 pool: PagePool, max_batch: int):
         self.iid = iid
         self.lm = lm
         self.par = par
-        self.kv_capacity = kv_capacity   # bytes available for KV
+        self.pool = pool                 # page-granular KV admission
         self.max_batch = max_batch
-        self.kv_used = 0.0
         self.running: List[Request] = []
-        self.ready: List[Request] = []    # transferred, awaiting admission
+        self.pending: List[Request] = []  # parked on prefill side, assigned
+        self.arrived: List[Request] = []  # transferred, joins at iter start
+        self.in_transfer = 0
         self.busy = False
 
     @property
     def load(self) -> int:
-        return len(self.running) + len(self.ready)
-
-    def kv_bytes(self, r: Request) -> float:
-        c = self.lm.cfg
-        if c.family == "ssm":
-            return self.lm.kv_read_bytes(0)
-        n = r.in_len + r.out_len
-        if c.sliding_window:
-            n = min(n, c.sliding_window)
-        return c.kv_bytes_per_token(self.lm.dtype_bytes) * n
+        return (len(self.running) + len(self.pending) + len(self.arrived)
+                + self.in_transfer)
 
     def can_admit(self, r: Request) -> bool:
-        return (len(self.running) < self.max_batch
-                and self.kv_used + self.kv_bytes(r) <= self.kv_capacity)
+        resident = len(self.running) + len(self.arrived) + self.in_transfer
+        return (resident < self.max_batch
+                and self.pool.can_alloc(
+                    self.pool.pages_for(_req_kv_bytes(self.lm, r))))
 
     def ctx_tokens(self) -> float:
         return float(sum(r.in_len + r.tokens_done for r in self.running))
@@ -158,6 +169,9 @@ def simulate_disaggregated(
         lm_tokens: Optional[int] = None,
         max_decode_batch: Optional[int] = None,
         kv_reserve: float = 0.1,
+        page_tokens: int = 16,
+        num_decode_pages: Optional[int] = None,
+        dispatcher: Optional[DisaggDispatcher] = None,
         phase: str = "both",
         horizon: float = 1e9) -> Tuple[List[Request], Dict]:
     """Returns (requests with timestamps, extras).
@@ -169,29 +183,35 @@ def simulate_disaggregated(
            - lm.param_bytes())
     cap = max(cap, lm.chip.hbm_bytes * 0.05 * decode.par.num_chips)
     max_b = max_decode_batch or 4096
+    # page-granular capacity: one page = page_tokens worth of KV bytes
+    # (SSM archs: one page per constant-size state)
+    per_tok = lm.cfg.kv_bytes_per_token(lm.dtype_bytes)
+    page_bytes = per_tok * page_tokens if per_tok else lm.kv_read_bytes(0)
+    page_bytes = max(page_bytes, 1.0)
+    n_pages = num_decode_pages if num_decode_pages is not None \
+        else max(int(cap // page_bytes), 1)
 
     P = [_PrefillInstance(i, lm, prefill.par, lm_tok)
          for i in range(prefill.count)]
-    D = [_DecodeInstance(i, lm, decode.par, cap, max_b)
+    D = [_DecodeInstance(i, lm, decode.par, PagePool(n_pages, page_bytes),
+                         max_b)
          for i in range(decode.count)]
+    disp = dispatcher or DisaggDispatcher()
+    tx = TransferManager(transfer_bw, page_bytes=int(page_bytes),
+                         n_layers=lm.cfg.num_layers)
 
-    evq: List[Tuple[float, int, str, object]] = []
-    ctr = itertools.count()
-    push = lambda t, kind, payload: heapq.heappush(evq, (t, next(ctr), kind, payload))
-
+    ev = EventLoop()
     for r in reqs:
-        push(r.arrive, "arrive", r)
+        ev.push(r.arrive, "arrive", r)
 
-    kv_times: List[float] = []
     busy_prefill = 0.0
     busy_decode = 0.0
-    t_now = 0.0
 
     def try_start_prefill(p: _PrefillInstance, now: float):
-        while p.can_admit(now):
+        while p.can_admit():
             start = max(now, p.next_admit)
             if start > now:
-                push(start, "prefill_poke", p)
+                ev.push(start, "prefill_poke", p)
                 return
             batch = p.form_batch()
             T = lm.prefill_time([r.in_len for r in batch], p.par)
@@ -199,28 +219,51 @@ def simulate_disaggregated(
             p.inflight += 1
             for r in batch:
                 r.prefill_start = now
-            push(now + T, "prefill_done", (p, batch, T))
+            ev.push(now + T, "prefill_done", (p, batch, T))
+
+    def assign_decode(r: Request, now: float, src: int):
+        """Least-loaded decode dispatch + park on the prefill side."""
+        di = disp.pick_decode(r.rid, [d.load for d in D])
+        # wire bytes = prompt KV only (decode positions are produced on the
+        # decode side); page reservation below covers the full residency.
+        # wire time comes from the latency model so calibrated overrides
+        # (benchmarks/table2) take effect.
+        if phase == "decode":
+            nbytes, wire_s = 0.0, 0.0
+        else:
+            nbytes = kv_bytes(lm.cfg, r.in_len, lm.dtype_bytes)
+            wire_s = lm.kv_transfer_time(r.in_len, transfer_bw)
+        tx.park(r.rid, r, nbytes, now, src=src, wire_s=wire_s)
+        D[di].pending.append(r)
+        ev.push(now, "decode_poke", D[di])
+
+    def try_admit(d: _DecodeInstance, now: float):
+        """Pull-based admission: reserve pages, then pull over the link."""
+        while d.pending and d.can_admit(d.pending[0]):
+            r = d.pending.pop(0)
+            d.pool.alloc(r.rid, d.pool.pages_for(_req_kv_bytes(lm, r)))
+            d.in_transfer += 1
+            _, t_done = tx.pull(r.rid, now, dst=d.iid)
+            ev.push(t_done, "transfer_done", (d, r))
 
     def try_start_decode(d: _DecodeInstance, now: float):
-        nonlocal busy_decode
+        try_admit(d, now)
         if d.busy:
             return
-        # pull-based admission: take from ready while KV capacity remains
-        while d.ready and d.can_admit(d.ready[0]):
-            r = d.ready.pop(0)
-            r.decode_admit = now
-            d.kv_used += d.kv_bytes(r)
-            d.running.append(r)
+        # transferred requests join the batch at an iteration boundary only
+        # (mirrors the live cluster, which admits between decode steps)
+        d.running.extend(d.arrived)
+        d.arrived.clear()
         if not d.running:
             return
         d.busy = True
         eff_b = max(len(d.running) / d.par.pp, 1.0)
         tau = lm.decode_time(eff_b, d.ctx_tokens() / d.par.pp,
                              Parallelism(d.par.tp, 1))
-        push(now + tau, "decode_iter", (d, tau))
+        ev.push(now + tau, "decode_iter", (d, tau))
 
-    while evq:
-        t_now, _, kind, payload = heapq.heappop(evq)
+    while ev:
+        t_now, kind, payload = ev.pop()
         if t_now > horizon:
             break
         if kind == "arrive":
@@ -228,13 +271,11 @@ def simulate_disaggregated(
             if phase == "decode":
                 r.prefill_start = t_now
                 r.first_token = t_now
-                d = min(D, key=lambda x: x.load)
-                push(t_now, "transfer_done", (d, r))
+                assign_decode(r, t_now, src=0)
                 continue
-            p = min(P, key=lambda x: x.queued_tokens)
-            p.queue.append(r)
-            p.queued_tokens += r.in_len
-            try_start_prefill(p, t_now)
+            pi = disp.pick_prefill(r.rid, [p.queue for p in P])
+            P[pi].queue.push(r)
+            ev.push(t_now, "prefill_poke", P[pi])
         elif kind == "prefill_poke":
             try_start_prefill(payload, t_now)
         elif kind == "prefill_done":
@@ -246,36 +287,43 @@ def simulate_disaggregated(
                 if phase == "prefill":
                     r.finish = t_now
                     continue
-                d = min(D, key=lambda x: x.load)
-                tt = lm.kv_transfer_time(r.in_len, transfer_bw)
-                kv_times.append(tt)
-                push(t_now + tt, "transfer_done", (d, r))
+                assign_decode(r, t_now, src=p.iid)
             try_start_prefill(p, t_now)
+        elif kind == "decode_poke":
+            try_start_decode(payload, t_now)
         elif kind == "transfer_done":
             d, r = payload
-            d.ready.append(r)
+            r.transfer_done = t_now
+            r.decode_admit = t_now
+            d.in_transfer -= 1
+            d.arrived.append(r)
             try_start_decode(d, t_now)
         elif kind == "decode_iter":
             d, tau = payload
             busy_decode += tau
             d.busy = False
-            still = []
             for r in d.running:
                 r.tokens_done += 1
+            still = []
+            for r in d.running:
                 if r.tokens_done >= r.out_len - 1 or r.out_len <= 1:
                     r.finish = t_now
-                    d.kv_used -= d.kv_bytes(r)
+                    d.pool.free(r.rid)
                 else:
                     still.append(r)
             d.running = still
             try_start_decode(d, t_now)
 
     extras = {
-        "kv_total": sum(kv_times),
-        "kv_p95": _percentile(kv_times, 0.95),
+        "kv_total": tx.total_time,
+        "kv_p95": _percentile(tx.times, 0.95),
+        "kv_chunks": tx.total_chunks,
+        "parked_bytes_peak": tx.peak_parked_bytes,
+        "decisions": disp.decisions,
         "breakdown": {"prefill_busy_s": busy_prefill,
                       "decode_busy_s": busy_decode,
-                      "lm_tokens": lm_tok, "max_decode_batch": max_b},
+                      "lm_tokens": lm_tok, "max_decode_batch": max_b,
+                      "decode_pages": n_pages},
     }
     return reqs, extras
 
@@ -299,19 +347,10 @@ def simulate_colocated(
            - lm.param_bytes())
     cap = max(cap, lm.chip.hbm_bytes * 0.05 * inst.par.num_chips)
 
-    def kv_bytes(r):
-        c = lm.cfg
-        if c.family == "ssm":
-            return lm.kv_read_bytes(0)
-        n = r.in_len + r.out_len
-        if c.sliding_window:
-            n = min(n, c.sliding_window)
-        return c.kv_bytes_per_token(lm.dtype_bytes) * n
-
     class Engine:
         def __init__(self, iid):
             self.iid = iid
-            self.waiting: List[Request] = []
+            self.waiting: FCFSQueue = FCFSQueue(token_of=lambda r: r.in_len)
             self.running: List[Request] = []
             self.kv_used = 0.0
             self.busy = False
@@ -322,51 +361,53 @@ def simulate_colocated(
 
         def can_admit(self, r):
             return (len(self.running) < max_b
-                    and self.kv_used + kv_bytes(r) <= cap)
+                    and self.kv_used + _req_kv_bytes(lm, r) <= cap)
 
     engines = [Engine(i) for i in range(inst.count)]
-    evq: List[Tuple[float, int, str, object]] = []
-    ctr = itertools.count()
-    push = lambda t, kind, payload: heapq.heappush(evq, (t, next(ctr), kind, payload))
+    ev = EventLoop()
     for r in reqs:
-        push(r.arrive, "arrive", r)
+        ev.push(r.arrive, "arrive", r)
 
     def step(e: Engine, now: float):
         if e.busy:
             return
-        # prefill first (vLLM prioritizes waiting prefills)
-        if e.waiting and e.can_admit(e.waiting[0]):
-            batch, tok = [], 0
-            while (e.waiting and e.can_admit(e.waiting[0])
-                   and (not batch or tok + e.waiting[0].in_len <= max_prefill_tokens)):
-                r = e.waiting.pop(0)
-                tok += r.in_len
-                e.kv_used += kv_bytes(r)
-                batch.append(r)
-            if batch:
-                e.busy = True
-                T = lm.prefill_time([r.in_len for r in batch], inst.par)
-                for r in batch:
-                    r.prefill_start = now
-                push(now + T, "prefill_done", (e, batch))
-                return
+        # prefill first (vLLM prioritizes waiting prefills), batch formed
+        # by the shared core; the stateful can_take reserves KV as it admits
+        taken = [0, 0.0]
+
+        def can_take(r):
+            if (len(e.running) + taken[0] < max_b
+                    and e.kv_used + taken[1] + _req_kv_bytes(lm, r) <= cap):
+                taken[0] += 1
+                taken[1] += _req_kv_bytes(lm, r)
+                return True
+            return False
+
+        batch = e.waiting.form_batch(max_prefill_tokens, can_take=can_take)
+        if batch:
+            e.kv_used += taken[1]
+            e.busy = True
+            T = lm.prefill_time([r.in_len for r in batch], inst.par)
+            for r in batch:
+                r.prefill_start = now
+            ev.push(now + T, "prefill_done", (e, batch))
+            return
         if e.running:
             e.busy = True
             eff_b = max(len(e.running) / inst.par.pp, 1.0)
             ctx = sum(r.in_len + r.tokens_done for r in e.running)
             tau = lm.decode_time(eff_b, ctx / inst.par.pp,
                                  Parallelism(inst.par.tp, 1))
-            push(now + tau, "decode_iter", (e, tau))
+            ev.push(now + tau, "decode_iter", (e, tau))
 
-    t_now = 0.0
-    while evq:
-        t_now, _, kind, payload = heapq.heappop(evq)
+    while ev:
+        t_now, kind, payload = ev.pop()
         if t_now > horizon:
             break
         if kind == "arrive":
             r = payload
-            e = min(engines, key=lambda x: x.load)
-            e.waiting.append(r)
+            e = engines[least_loaded([x.load for x in engines])]
+            e.waiting.push(r)
             step(e, t_now)
         elif kind == "prefill_done":
             e, batch = payload
@@ -384,7 +425,7 @@ def simulate_colocated(
                 r.tokens_done += 1
                 if r.tokens_done >= r.out_len - 1 or r.out_len <= 1:
                     r.finish = t_now
-                    e.kv_used -= kv_bytes(r)
+                    e.kv_used -= _req_kv_bytes(lm, r)
                 else:
                     still.append(r)
             e.running = still

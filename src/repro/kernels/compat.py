@@ -1,0 +1,11 @@
+"""Version compatibility shims for Pallas TPU.
+
+`pltpu.CompilerParams` was renamed from `TPUCompilerParams` across JAX
+releases; resolve whichever this JAX ships so the kernels lower on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

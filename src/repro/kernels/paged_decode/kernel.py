@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import CompilerParams
+
 NEG_INF = -2.3819763e38
 
 
@@ -116,7 +118,7 @@ def paged_decode(q, k_pages, v_pages, block_table, lens, *,
         ),
         out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(block_table, lens, q, k_pages, v_pages)
     return out

@@ -13,13 +13,15 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("softcap", "impl"))
+@partial(jax.jit, static_argnames=("scale", "softcap", "impl"))
 def paged_decode_op(q, k_pages, v_pages, block_table, lens, *,
-                    softcap: float = 0.0, impl: str = "auto"):
+                    scale: float = None, softcap: float = 0.0,
+                    impl: str = "auto"):
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "ref":
         return paged_decode_ref(q, k_pages, v_pages, block_table, lens,
-                                softcap=softcap)
+                                scale=scale, softcap=softcap)
     return paged_decode(q, k_pages, v_pages, block_table, lens,
-                        softcap=softcap, interpret=(impl == "interpret"))
+                        scale=scale, softcap=softcap,
+                        interpret=(impl == "interpret"))

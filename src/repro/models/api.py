@@ -81,12 +81,37 @@ class Model:
     def decode_step(self, params, cache, tokens):
         return _mod(self.cfg).decode_step(params, cache, tokens, self.cfg)
 
+    def decode_step_paged(self, params, cache, tokens):
+        if not supports_paged(self.cfg):
+            raise NotImplementedError(
+                f"paged KV decode unsupported for {self.cfg.name} "
+                f"(family={self.cfg.family})")
+        return _mod(self.cfg).decode_step_paged(params, cache, tokens,
+                                                self.cfg)
+
     # ---- specs -------------------------------------------------------
     def cache_specs(self, batch: int, max_len: int, dtype=jnp.bfloat16, **kw):
         return _mod(self.cfg).cache_specs(self.cfg, batch, max_len, dtype, **kw)
 
+    def paged_cache_specs(self, batch: int, num_pages: int, page_size: int,
+                          dtype=jnp.bfloat16, max_len=None):
+        if not supports_paged(self.cfg):
+            raise NotImplementedError(
+                f"paged KV cache unsupported for {self.cfg.name}")
+        return _mod(self.cfg).paged_cache_specs(
+            self.cfg, batch, num_pages, page_size, dtype, max_len=max_len)
+
     def cache_logical_axes(self):
         return _mod(self.cfg).cache_logical_axes(self.cfg)
+
+
+def supports_paged(cfg) -> bool:
+    """Paged KV decode covers plain causal attention: dense/GQA (incl. MoE
+    FFNs and VLM backbones) without sliding windows. SSM/hybrid state and
+    ring-packed window caches stay on the dense slab path."""
+    return (cfg.family in ("dense", "moe", "vlm")
+            and cfg.sliding_window == 0
+            and not cfg.local_global_ratio)
 
 
 def build_model(cfg) -> Model:

@@ -297,6 +297,85 @@ def decode_step(params, cache, tokens, cfg):
     return logits, new_cache
 
 
+def decode_step_paged(params, cache, tokens, cfg):
+    """Paged-KV decode step. tokens: (B,) int32. Returns (logits, cache').
+
+    The cache holds per-segment page pools `(layers, num_pages, page_size,
+    Hkv, hd)` shared across sequences, plus one block table `(B,
+    pages_per_seq)` used by every layer: logical page j of sequence b lives
+    in physical page `block_tables[b, j]` of *each* layer's pool. The new
+    token's K/V is scattered into page `pos // page_size`, offset `pos %
+    page_size`, then attention runs through `paged_decode_op` (Pallas on
+    TPU, jnp oracle on CPU). Only non-windowed attention segments are
+    supported — callers gate on `supports_paged`.
+    """
+    x = embed_lookup(params["embed"], tokens)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = shard(x, "batch", "embed_act")
+    from ..kernels.paged_decode.ops import paged_decode_op
+    pos = cache["pos"]
+    table = cache["block_tables"]
+    B = tokens.shape[0]
+    max_pps = table.shape[1]
+    bidx = jnp.arange(B)
+    new_cache: Dict[str, Any] = {}
+    for i, seg in enumerate(layer_plan(cfg)):
+        kc, vc = cache[f"seg{i}"]["k"], cache[f"seg{i}"]["v"]
+        page_size = kc.shape[2]
+        # freed/idle slots keep pos growing into the reserved trash page 0;
+        # clamp so the page walk stays in-table and the write stays benign
+        wpos = jnp.minimum(pos, max_pps * page_size - 1)
+        pidx = table[bidx, wpos // page_size]
+        off = wpos % page_size
+        lens = jnp.minimum(pos + 1, max_pps * page_size)
+
+        def body(x, layer, _kind=seg.kind):
+            pl, kc_l, vc_l = layer
+            h = apply_norm(x[:, None], pl["ln1"], cfg)[:, 0]
+            q, k, v = _qkv(pl["attn"], h[:, None], cfg, pos[:, None],
+                           _rope_theta(_kind, cfg))
+            q, k, v = q[:, 0], k[:, 0], v[:, 0]
+            kc_l = kc_l.at[pidx, off].set(k.astype(kc_l.dtype))
+            vc_l = vc_l.at[pidx, off].set(v.astype(vc_l.dtype))
+            o = paged_decode_op(q, kc_l, vc_l, table, lens,
+                                softcap=cfg.attn_logit_softcap)
+            a = jnp.einsum("bhk,hkd->bd", o, pl["attn"]["wo"].astype(o.dtype))
+            x = x + a
+            h = apply_norm(x[:, None], pl["ln2"], cfg)[:, 0]
+            f, _ = _ffn(pl, h[:, None], cfg, _kind)
+            return x + f[:, 0], (kc_l, vc_l)
+
+        x, (kc, vc) = jax.lax.scan(body, x, (params[f"seg{i}"], kc, vc))
+        new_cache[f"seg{i}"] = {"k": kc, "v": vc}
+    x = apply_norm(x[:, None], params["final_norm"], cfg)[:, 0]
+    logits = unembed(params, x, cfg)
+    new_cache["pos"] = pos + 1
+    new_cache["block_tables"] = table
+    return logits, new_cache
+
+
+def paged_cache_specs(cfg, batch: int, num_pages: int, page_size: int,
+                      dtype=jnp.bfloat16, max_len: Optional[int] = None):
+    """ShapeDtypeStructs for a paged KV cache.
+
+    Per attention segment: k/v pools `(layers, num_pages, page_size, Hkv,
+    hd)`. `block_tables` is `(batch, pages_per_seq)` where pages_per_seq =
+    ceil(max_len / page_size); unassigned entries point at the reserved
+    trash page 0. `pos` is the per-slot write cursor.
+    """
+    max_len = max_len if max_len is not None else num_pages * page_size
+    pps = -(-max_len // page_size)
+    out: Dict[str, Any] = {}
+    for i, seg in enumerate(layer_plan(cfg)):
+        shp = (seg.n, num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+        out[f"seg{i}"] = {"k": jax.ShapeDtypeStruct(shp, dtype),
+                          "v": jax.ShapeDtypeStruct(shp, dtype)}
+    out["block_tables"] = jax.ShapeDtypeStruct((batch, pps), jnp.int32)
+    out["pos"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return out
+
+
 def cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     """ShapeDtypeStructs for the KV cache (dry-run decode inputs)."""
     out: Dict[str, Any] = {}

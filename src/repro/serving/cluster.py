@@ -2,21 +2,23 @@
 baseline, on real JAX engines with virtual-clock concurrency emulation.
 
 Controller: FCFS arrival queue -> shortest-queue prefill dispatch ->
-pull-based KV migration -> least-loaded decode dispatch. Fault injection
-hooks exercise the failover paths in core.fault.
+pull-based, page-granular KV migration -> least-loaded decode dispatch.
+All dispatch decisions and batch formation go through the shared scheduler
+core in `core.scheduler` (the same code the discrete-event simulator
+runs), and decode admission is gated on free KV *pages*, not whole slots.
+Fault injection hooks exercise the failover paths in core.fault.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.fault import HeartbeatMonitor, plan_failover
 from ..core.kv_transfer import TransferManager, kv_bytes
-from ..core.scheduler import FCFSQueue, least_loaded, shortest_queue
+from ..core.scheduler import (DisaggDispatcher, EventLoop, FCFSQueue,
+                              least_loaded)
 from ..core.workload import Request
 from .engine import Engine, Sequence
 
@@ -30,23 +32,36 @@ class ServedResult:
     finish: float
 
 
+def _page_bytes(cfg, page_size: int, dtype_bytes: int = 2) -> Optional[int]:
+    per_tok = cfg.kv_bytes_per_token(dtype_bytes)
+    return per_tok * page_size if per_tok else None
+
+
 class DisaggCluster:
     """n_prefill + n_decode live engines; virtual-clock event loop."""
 
     def __init__(self, cfg, params, *, n_prefill: int = 1, n_decode: int = 1,
                  max_batch: int = 8, max_len: int = 256,
                  transfer_bandwidth: float = 50e9, lm_tokens: int = 256,
-                 attn_blocks=(64, 64)):
+                 attn_blocks=(64, 64), page_size: int = 16,
+                 decode_num_pages: Optional[int] = None,
+                 paged: Optional[bool] = None):
         self.cfg = cfg
         self.prefill = [Engine(cfg, params, max_batch=1, max_len=max_len,
-                               attn_blocks=attn_blocks)
+                               attn_blocks=attn_blocks, paged=paged,
+                               page_size=page_size)
                         for _ in range(n_prefill)]
         self.decode = [Engine(cfg, params, max_batch=max_batch,
-                              max_len=max_len, attn_blocks=attn_blocks)
+                              max_len=max_len, attn_blocks=attn_blocks,
+                              paged=paged, page_size=page_size,
+                              num_pages=decode_num_pages)
                        for _ in range(n_decode)]
         self.queues = [FCFSQueue(token_of=lambda s: len(s.tokens))
                        for _ in range(n_prefill)]
-        self.tx = TransferManager(transfer_bandwidth)
+        self.dispatcher = DisaggDispatcher()
+        self.tx = TransferManager(transfer_bandwidth,
+                                  page_bytes=_page_bytes(cfg, page_size),
+                                  n_layers=cfg.num_layers)
         self.lm_tokens = lm_tokens
         self.monitor = HeartbeatMonitor(timeout=1e9)
         for i in range(n_prefill):
@@ -61,7 +76,10 @@ class DisaggCluster:
         """Kill a decode instance; returns rids needing re-prefill."""
         self.monitor.mark_failed(f"decode{idx}")
         self.failed_decode.add(idx)
-        lost = [s.rid for s in getattr(self.decode[idx], "_active", [])]
+        # `_active` may predate the latest iteration's completion filter —
+        # sequences that already finished are not lost
+        lost = [s.rid for s in getattr(self.decode[idx], "_active", [])
+                if not s.done]
         return lost
 
     def fail_prefill(self, idx: int) -> List[int]:
@@ -81,32 +99,38 @@ class DisaggCluster:
                                 size=r.in_len).tolist()
             seqs[r.rid] = Sequence(r.rid, toks, r.out_len)
 
-        evq: List[Tuple[float, int, str, Any]] = []
-        ctr = itertools.count()
-
-        def push(t, kind, payload):
-            heapq.heappush(evq, (t, next(ctr), kind, payload))
-
+        ev = EventLoop()
         for r in requests:
-            push(r.arrive, "arrive", r)
+            ev.push(r.arrive, "arrive", r)
         if fail_decode_at is not None:
-            push(fail_decode_at[0], "fail_decode", fail_decode_at[1])
+            ev.push(fail_decode_at[0], "fail_decode", fail_decode_at[1])
 
         # per-engine virtual clocks
         p_free = [0.0] * len(self.prefill)
         d_free = [0.0] * len(self.decode)
         d_active: List[List[Sequence]] = [[] for _ in self.decode]
-        d_ready: List[List[Tuple[Request, Any]]] = [[] for _ in self.decode]
+        d_pending: List[List[Tuple[Request, Sequence]]] = [[] for _ in self.decode]
         results: Dict[int, ServedResult] = {}
 
-        def healthy_p(i):
-            return i not in self.failed_prefill
+        def alive_p():
+            return [i for i in range(len(self.prefill))
+                    if i not in self.failed_prefill]
 
-        def healthy_d(i):
-            return i not in self.failed_decode
+        def alive_d():
+            return [i for i in range(len(self.decode))
+                    if i not in self.failed_decode]
 
-        def start_prefill(i, now):
-            if not healthy_p(i) or not self.queues[i].items or p_free[i] > now:
+        def _finish(req, seq, t):
+            ttft = req.first_token - req.arrive
+            tpot = ((req.finish - req.first_token) / max(seq.out_len - 1, 1))
+            results[req.rid] = ServedResult(req.rid, seq.tokens, ttft, tpot,
+                                            req.finish)
+
+        def poke_prefill(i, now):
+            if i in self.failed_prefill or not self.queues[i].items:
+                return
+            if p_free[i] > now:                  # busy: come back when free
+                ev.push(p_free[i], "poke_prefill", i)
                 return
             batch = self.queues[i].form_batch(self.lm_tokens, max_batch=1)
             for seq in batch:
@@ -121,27 +145,24 @@ class DisaggCluster:
                     _finish(req, seq, now + dt)
                 else:
                     nbytes = kv_bytes(self.cfg, len(seq.tokens) - 1)
-                    self.tx.park(seq.rid, blob, nbytes, now + dt)
-                    push(now + dt, "dispatch_decode", (req, seq))
+                    self.tx.park(seq.rid, blob, nbytes, now + dt, src=i)
+                    ev.push(now + dt, "dispatch_decode", (req, seq))
                 p_free[i] = now + dt
-                push(now + dt, "poke_prefill", i)
+                ev.push(now + dt, "poke_prefill", i)
 
-        def _finish(req, seq, t):
-            ttft = req.first_token - req.arrive
-            tpot = ((req.finish - req.first_token) / max(seq.out_len - 1, 1))
-            results[req.rid] = ServedResult(req.rid, seq.tokens, ttft, tpot,
-                                            req.finish)
-
-        def start_decode(i, now):
-            if not healthy_d(i) or d_free[i] > now:
+        def poke_decode(i, now):
+            if i in self.failed_decode:
+                return
+            if d_free[i] > now:
+                ev.push(d_free[i], "poke_decode", i)
                 return
             d = self.decode[i]
-            # pull-based admission
-            while d_ready[i] and d.has_slot():
-                req, seq = d_ready[i].pop(0)
-                blob, t_done = self.tx.pull(seq.rid, now)
+            # pull-based admission against free KV pages (paper §4.3)
+            while d_pending[i] and d.can_admit(d_pending[i][0][1]):
+                req, seq = d_pending[i].pop(0)
+                blob, t_done = self.tx.pull(seq.rid, now, dst=i)
                 d.insert_kv(seq, blob)
-                seq._req.decode_admit = max(now, t_done)
+                req.decode_admit = max(now, t_done)
                 d_active[i].append(seq)
             d._active = d_active[i]
             if not d_active[i]:
@@ -158,28 +179,30 @@ class DisaggCluster:
                 else:
                     still.append(seq)
             d_active[i] = still
-            push(done_t, "poke_decode", i)
+            ev.push(done_t, "poke_decode", i)
 
-        while evq:
-            t, _, kind, payload = heapq.heappop(evq)
+        while ev:
+            t, kind, payload = ev.pop()
             if kind == "arrive":
                 r = payload
                 seq = seqs[r.rid]
                 seq._req = r
-                alive = [i for i in range(len(self.queues)) if healthy_p(i)]
-                qi = min(alive, key=lambda i: self.queues[i].queued_tokens)
+                qi = self.dispatcher.pick_prefill(r.rid, self.queues,
+                                                  alive_p())
                 self.queues[qi].push(seq)
-                start_prefill(qi, max(t, p_free[qi]))
+                ev.push(t, "poke_prefill", qi)
             elif kind == "poke_prefill":
-                start_prefill(payload, t)
+                poke_prefill(payload, t)
             elif kind == "dispatch_decode":
                 req, seq = payload
-                alive = [i for i in range(len(self.decode)) if healthy_d(i)]
-                di = min(alive, key=lambda i: len(d_active[i]) + len(d_ready[i]))
-                d_ready[di].append((req, seq))
-                start_decode(di, max(t, d_free[di]))
+                alive = alive_d()
+                loads = [len(d_active[i]) + len(d_pending[i])
+                         for i in range(len(self.decode))]
+                di = self.dispatcher.pick_decode(req.rid, loads, alive)
+                d_pending[di].append((req, seq))
+                ev.push(t, "poke_decode", di)
             elif kind == "poke_decode":
-                start_decode(payload, t)
+                poke_decode(payload, t)
             elif kind == "fail_decode":
                 idx = payload
                 lost = self.fail_decode(idx)
@@ -188,15 +211,16 @@ class DisaggCluster:
                     seq = seqs[rid]
                     self.decode[idx].release(seq)
                     seq.done = False
-                    alive = [i for i in range(len(self.queues)) if healthy_p(i)]
-                    qi = min(alive, key=lambda i: self.queues[i].queued_tokens)
+                    qi = self.dispatcher.pick_prefill(rid, self.queues,
+                                                      alive_p())
                     self.queues[qi].push(seq)
-                    push(t, "poke_prefill", qi)
+                    ev.push(t, "poke_prefill", qi)
+                d_active[idx] = []
                 # also re-route ready-but-unpulled requests
-                moved = d_ready[idx]
-                d_ready[idx] = []
+                moved = d_pending[idx]
+                d_pending[idx] = []
                 for req, seq in moved:
-                    push(t, "dispatch_decode", (req, seq))
+                    ev.push(t, "dispatch_decode", (req, seq))
         return results
 
 
@@ -206,23 +230,24 @@ class ColocatedCluster:
 
     def __init__(self, cfg, params, *, n_engines: int = 1, max_batch: int = 8,
                  max_len: int = 256, max_prefill_tokens: int = 512,
-                 attn_blocks=(64, 64)):
+                 attn_blocks=(64, 64), page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 paged: Optional[bool] = None):
         self.cfg = cfg
         self.engines = [Engine(cfg, params, max_batch=max_batch,
-                               max_len=max_len, attn_blocks=attn_blocks)
+                               max_len=max_len, attn_blocks=attn_blocks,
+                               paged=paged, page_size=page_size,
+                               num_pages=num_pages)
                         for _ in range(n_engines)]
         self.max_prefill_tokens = max_prefill_tokens
 
     def run(self, requests: List[Request]) -> Dict[int, ServedResult]:
         rng = np.random.default_rng(0)
         results: Dict[int, ServedResult] = {}
-        evq: List[Tuple[float, int, str, Any]] = []
-        ctr = itertools.count()
+        ev = EventLoop()
 
-        def push(t, kind, payload):
-            heapq.heappush(evq, (t, next(ctr), kind, payload))
-
-        waiting: List[List[Tuple[Request, Sequence]]] = [[] for _ in self.engines]
+        waiting = [FCFSQueue(token_of=lambda s: len(s.tokens))
+                   for _ in self.engines]
         active: List[List[Sequence]] = [[] for _ in self.engines]
         free_at = [0.0] * len(self.engines)
 
@@ -230,7 +255,7 @@ class ColocatedCluster:
             toks = rng.integers(1, self.cfg.vocab_size, size=r.in_len).tolist()
             s = Sequence(r.rid, toks, r.out_len)
             s._req = r
-            push(r.arrive, "arrive", (r, s))
+            ev.push(r.arrive, "arrive", (r, s))
 
         def _finish(req, seq, t):
             req.finish = t
@@ -240,10 +265,15 @@ class ColocatedCluster:
 
         def step(i, now):
             if free_at[i] > now:
+                ev.push(free_at[i], "poke", i)
                 return
             e = self.engines[i]
-            if waiting[i] and e.has_slot():
-                req, seq = waiting[i].pop(0)
+            # prefill priority; page-aware admission via the shared core
+            batch = waiting[i].form_batch(self.max_prefill_tokens,
+                                          max_batch=1, can_take=e.can_admit)
+            if batch:
+                seq = batch[0]
+                req = seq._req
                 first, blob, dt = e.prefill_request(seq)
                 seq.tokens.append(first)
                 seq.produced += 1
@@ -256,7 +286,7 @@ class ColocatedCluster:
                 else:
                     active[i].append(seq)
                 free_at[i] = now + dt
-                push(now + dt, "poke", i)
+                ev.push(now + dt, "poke", i)
                 return
             if active[i]:
                 dt = e.decode_step(active[i])
@@ -270,16 +300,16 @@ class ColocatedCluster:
                         still.append(seq)
                 active[i] = still
                 free_at[i] = done_t
-                push(done_t, "poke", i)
+                ev.push(done_t, "poke", i)
 
-        while evq:
-            t, _, kind, payload = heapq.heappop(evq)
+        while ev:
+            t, kind, payload = ev.pop()
             if kind == "arrive":
                 r, s = payload
-                i = min(range(len(self.engines)),
-                        key=lambda j: len(waiting[j]) + len(active[j]))
-                waiting[i].append((r, s))
-                step(i, max(t, free_at[i]))
+                i = least_loaded([len(waiting[j]) + len(active[j])
+                                  for j in range(len(self.engines))])
+                waiting[i].push(s)
+                ev.push(t, "poke", i)
             elif kind == "poke":
                 step(payload, t)
         return results

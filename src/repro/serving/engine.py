@@ -1,10 +1,17 @@
 """Live single-instance inference engine (CPU-runnable, TPU-shaped).
 
-Slot-based KV cache: `max_batch` slots x `max_len` tokens. Prefill runs
-per-request, right-padded to length buckets (bounded recompiles) — padding
-sits *after* the causal horizon and beyond `pos`, so it is never attended.
-Archs whose prefill carries running state through the sequence (SSM,
-hybrid, sliding-window ring packing) use exact lengths instead.
+KV storage is *paged* for plain-attention archs (dense/GQA/MoE/VLM without
+sliding windows): a pool of fixed-size pages plus per-sequence block
+tables, managed by `KVCacheManager`. Prefill caches are spliced in at page
+granularity (a block-table update + O(pages) scatter, never a full-cache
+rewrite) and decode dispatches through the `kernels/paged_decode` op.
+State-carrying archs (SSM, hybrid, encdec, sliding-window ring caches)
+fall back to the dense `max_batch x max_len` slot slab.
+
+Prefill runs per-request, right-padded to length buckets (bounded
+recompiles) — padding sits *after* the causal horizon and beyond `pos`, so
+it is never attended. Archs whose prefill carries running state through
+the sequence use exact lengths instead.
 
 Step times are measured and accumulated on a virtual clock so a 1-CPU host
 can emulate N concurrent instances honestly (used by the Table-2
@@ -20,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.api import build_model
+from ..models.api import build_model, supports_paged
+from .kv_cache import KVCacheManager, TRASH_PAGE
 
 _BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 
@@ -38,7 +46,9 @@ class Sequence:
 class Engine:
     def __init__(self, cfg, params=None, *, max_batch: int = 8,
                  max_len: int = 512, seed: int = 0, attn_blocks=(128, 128),
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 paged: Optional[bool] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.dtype = dtype
@@ -51,33 +61,57 @@ class Engine:
         # exact-length prefill for state-carrying families
         self.exact_len = (cfg.family in ("ssm", "hybrid", "encdec")
                           or cfg.sliding_window > 0)
+        self.paged = supports_paged(cfg) if paged is None \
+            else (paged and supports_paged(cfg))
         self.clock = 0.0                      # virtual seconds
         self.steps = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        if self.paged:
+            pps = -(-max_len // page_size)
+            # default pool: dense-slab-equivalent capacity + trash page 0
+            num_pages = num_pages or (max_batch * pps + 1)
+            assert num_pages >= pps + 1, \
+                "page pool must fit at least one max_len sequence"
+            self._kv = KVCacheManager(num_pages, page_size, max_len)
+        else:
+            self._kv = None
         self._cache = self._empty_cache()
         self._slot_free = list(range(max_batch))
         self._prefill_fn: Dict[int, Any] = {}
+        self._insert_fn: Dict[Tuple[int, int], Any] = {}
 
-        def _decode(params, cache, tokens):
-            return self.model.decode_step(params, cache, tokens)
+        if self.paged:
+            def _decode(params, cache, tokens):
+                return self.model.decode_step_paged(params, cache, tokens)
+        else:
+            def _decode(params, cache, tokens):
+                return self.model.decode_step(params, cache, tokens)
         self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
 
     # ---- cache plumbing ------------------------------------------------
     def _empty_cache(self):
-        specs = self.model.cache_specs(self.max_batch, self.max_len,
-                                       self.dtype)
+        if self.paged:
+            specs = self.model.paged_cache_specs(
+                self.max_batch, self._kv.num_pages, self._kv.page_size,
+                self.dtype, max_len=self.max_len)
+        else:
+            specs = self.model.cache_specs(self.max_batch, self.max_len,
+                                           self.dtype)
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
 
     def _get_prefill_fn(self, bucket: int):
         if bucket not in self._prefill_fn:
+            # paged engines emit a bucket-sized cache (the migration blob);
+            # slab engines pad to max_len so the merge is a pure slot write
+            target_len = None if self.paged else self.max_len
             def _pf(params, toks):
                 mod = self.model
                 from ..models import api as _api
                 m = _api._mod(mod.cfg)
                 logits, cache, _ = m.forward(
                     params, toks, mod.cfg, attn_blocks=self.attn_blocks,
-                    return_cache=True, max_len=self.max_len)
+                    return_cache=True, max_len=target_len)
                 return logits, cache
             self._prefill_fn[bucket] = jax.jit(_pf)
         return self._prefill_fn[bucket]
@@ -89,6 +123,26 @@ class Engine:
     @property
     def free_slots(self) -> int:
         return len(self._slot_free)
+
+    @property
+    def free_pages(self) -> int:
+        return self._kv.free_pages if self.paged else self.free_slots
+
+    @staticmethod
+    def tokens_needed(seq: Sequence) -> int:
+        """KV positions for the sequence's full residency: cached prompt +
+        every remaining decode write. Invariant across prefill (prefill
+        appends one token and bumps `produced` together)."""
+        return len(seq.tokens) - 1 + seq.out_len - seq.produced
+
+    def can_admit(self, seq: Sequence) -> bool:
+        """Pull-based admission signal: a free batch slot AND enough free
+        KV pages for the whole residency (paper §4.3)."""
+        if not self._slot_free:
+            return False
+        if not self.paged:
+            return True
+        return self._kv.can_admit(self.tokens_needed(seq))
 
     def prefill_request(self, seq: Sequence) -> Tuple[int, Any, float]:
         """Run prefill; returns (first_token, kv_blob, step_time)."""
@@ -117,9 +171,48 @@ class Engine:
         cache, _ = kv_blob
         return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 
+    # ---- paged insert (block-table splice) ------------------------------
+    def _get_insert_fn(self, n_splice: int, src_len: int):
+        key = (n_splice, src_len)
+        if key not in self._insert_fn:
+            ps = self._kv.page_size
+
+            def _ins(dst, src_segs, splice_ids, row, slot, n_tok):
+                out = dict(dst)
+                span = n_splice * ps
+                for name, seg in src_segs.items():
+                    k_src, v_src = seg["k"][:, 0], seg["v"][:, 0]
+                    if src_len > span:
+                        k_src, v_src = k_src[:, :span], v_src[:, :span]
+                    elif src_len < span:
+                        pad = [(0, 0), (0, span - src_len), (0, 0), (0, 0)]
+                        k_src, v_src = jnp.pad(k_src, pad), jnp.pad(v_src, pad)
+                    n = k_src.shape[0]
+                    shp = (n, n_splice, ps) + k_src.shape[2:]
+                    dk, dv = dst[name]["k"], dst[name]["v"]
+                    out[name] = {
+                        "k": dk.at[:, splice_ids].set(
+                            k_src.reshape(shp).astype(dk.dtype)),
+                        "v": dv.at[:, splice_ids].set(
+                            v_src.reshape(shp).astype(dv.dtype)),
+                    }
+                out["block_tables"] = dst["block_tables"].at[slot].set(row)
+                out["pos"] = dst["pos"].at[slot].set(n_tok)
+                return out
+
+            self._insert_fn[key] = jax.jit(_ins, donate_argnums=(0,))
+        return self._insert_fn[key]
+
     def insert_kv(self, seq: Sequence, kv_blob) -> int:
-        """Install a transferred prefill cache into a free slot."""
+        """Install a transferred prefill cache.
+
+        Paged: allocate the block table for the sequence's residency, then
+        splice the blob's pages into the pools — touches O(prompt pages) of
+        device memory, not the whole cache. Dense fallback: slot write into
+        the slab."""
         cache, n_tok = kv_blob
+        if self.paged:
+            return self._insert_kv_paged(seq, cache, n_tok)
         slot = self._slot_free.pop(0)
         seq.slot = slot
 
@@ -134,7 +227,6 @@ class Engine:
                         # sequence axes may be shorter in src (bucket < max)
                         sl = tuple(slice(0, s) for s in src.shape)
                         src_sq = jnp.squeeze(src[sl], axis=ax)
-                        grow = [slice(0, n) for n in src_sq.shape]
                         full_idx = list(idx)
                         j = 0
                         for i2 in range(dst.ndim):
@@ -149,8 +241,31 @@ class Engine:
             jnp.asarray(n_tok, jnp.int32))
         return slot
 
+    def _insert_kv_paged(self, seq: Sequence, cache, n_tok: int) -> int:
+        slot = self._slot_free.pop(0)
+        seq.slot = slot
+        # same residency formula the admission check approved
+        page_ids = self._kv.alloc(seq.rid, max(self.tokens_needed(seq), n_tok))
+        ps = self._kv.page_size
+        n_splice = min(-(-n_tok // ps), len(page_ids))
+        src_segs = {k: v for k, v in cache.items() if k.startswith("seg")}
+        src_len = next(iter(src_segs.values()))["k"].shape[2]
+        fn = self._get_insert_fn(n_splice, src_len)
+        self._cache = fn(
+            self._cache, src_segs,
+            jnp.asarray(page_ids[:n_splice], jnp.int32),
+            jnp.asarray(self._kv.padded_table(seq.rid), jnp.int32),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(n_tok, jnp.int32))
+        return slot
+
     def release(self, seq: Sequence):
         if seq.slot >= 0:
+            if self.paged:
+                self._kv.free(seq.rid)
+                # repoint the slot at the trash page; later writes are inert
+                self._cache["block_tables"] = (
+                    self._cache["block_tables"].at[seq.slot].set(TRASH_PAGE))
+                self._cache["pos"] = self._cache["pos"].at[seq.slot].set(0)
             self._slot_free.append(seq.slot)
             seq.slot = -1
 

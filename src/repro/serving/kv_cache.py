@@ -1,0 +1,103 @@
+"""Block-granular KV-cache manager for the live engine (vLLM-style paging,
+TetriInfer-style disaggregated admission).
+
+Page layout
+-----------
+The device cache owned by `Engine` holds, per attention segment, two pools
+shaped ``(layers, num_pages, page_size, num_kv_heads, head_dim)``. A
+*page* is ``page_size`` consecutive token positions of one sequence,
+replicated across every layer: block tables are per-sequence, not
+per-layer, so physical page ``p`` stores the same logical positions in all
+layers' pools. Page 0 is reserved as a trash page — freed/idle batch slots
+point every block-table entry at it, so their (masked, never attended)
+decode writes land harmlessly.
+
+Block-table semantics
+---------------------
+`KVCacheManager` is the host-side allocator: a free list of physical page
+ids plus one block table (a list of page ids) per resident sequence.
+Admission reserves ``ceil(tokens / page_size)`` pages up front for the
+sequence's full lifetime (prompt + all decode positions, clamped to the
+engine's ``max_len``), which is exactly the pull-based admission signal the
+paper's burstiness argument assumes: a decode instance admits a parked
+prefill iff `can_admit` says the whole residency fits. Inserting a
+transferred prefill is a *splice*: the dense (layers, 1, S, Hkv, hd) blob
+is chunked into pages and scattered into the pools at the allocated page
+ids — O(pages written), never a full-cache rewrite — and the device block
+table row for the sequence's batch slot is overwritten with the new ids.
+
+Follow-on work (see ROADMAP): prefix-cache page sharing (refcounted pages
+keyed by token-prefix hash) and preemption (page stealing with re-prefill).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from ..core.scheduler import PagePool
+
+TRASH_PAGE = 0
+
+
+class KVCacheManager:
+    """Free list + per-sequence block tables over a fixed page pool.
+
+    Capacity accounting (used/free/peak, per-rid reservations) is the
+    shared `core.scheduler.PagePool` — the same counter the simulator's
+    decode instances admit against — with the physical page-id free list
+    and the max_len residency clamp layered on top.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, max_len: int):
+        assert num_pages >= 2, "need at least the trash page + one real page"
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_len = max_len
+        self.max_pages_per_seq = -(-max_len // page_size)
+        # page 0 is the reserved trash page, never handed out
+        self.pool = PagePool(num_pages - 1, unit=page_size)
+        self._free: List[int] = list(range(1, num_pages))
+        self._tables: Dict[int, List[int]] = {}
+
+    # ---- capacity ----------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return self.pool.free_pages
+
+    @property
+    def used_pages(self) -> int:
+        return self.pool.used
+
+    @property
+    def peak_used_pages(self) -> int:
+        return self.pool.peak_used
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Whole pages covering `n_tokens` positions (clamped to max_len)."""
+        return self.pool.pages_for(min(max(n_tokens, 1), self.max_len))
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pool.can_alloc(self.pages_for(n_tokens))
+
+    # ---- allocation ---------------------------------------------------
+    def alloc(self, rid: int, n_tokens: int) -> List[int]:
+        """Reserve the block table for a sequence's full residency."""
+        need = self.pages_for(n_tokens)
+        self.pool.alloc(rid, need)
+        pages = self._free[:need]
+        del self._free[:need]
+        self._tables[rid] = pages
+        return pages
+
+    def block_table(self, rid: int) -> List[int]:
+        return self._tables[rid]
+
+    def free(self, rid: int) -> int:
+        """Release a sequence's pages back to the pool."""
+        n = self.pool.free(rid)
+        self._free.extend(self._tables.pop(rid))
+        return n
+
+    def padded_table(self, rid: int) -> List[int]:
+        """Block table padded with the trash page to max_pages_per_seq."""
+        t = self._tables[rid]
+        return t + [TRASH_PAGE] * (self.max_pages_per_seq - len(t))

@@ -13,9 +13,61 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:                                    # optional deps: fall back to stdlib
+    import msgpack
+except ImportError:                     # pragma: no cover - env dependent
+    msgpack = None
+try:
+    import zstandard as zstd
+except ImportError:                     # pragma: no cover - env dependent
+    zstd = None
+import json
+import zlib
+
+
+class _ZlibCodec:
+    """Stdlib stand-in with the zstd compressor/decompressor interface."""
+
+    def __init__(self, level: int = 6):
+        self.level = level
+
+    def compress(self, data: bytes) -> bytes:
+        return zlib.compress(data, self.level)
+
+    def decompress(self, data: bytes) -> bytes:
+        return zlib.decompress(data)
+
+
+def _compressor(level: int):
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=level), "zstd"
+    return _ZlibCodec(min(level * 2, 9)), "zlib"
+
+
+def _decompressor(codec: str):
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError("checkpoint was written with zstd, which is "
+                               "not installed")
+        return zstd.ZstdDecompressor()
+    return _ZlibCodec()
+
+
+def _pack_index(index: Dict) -> bytes:
+    if msgpack is not None:
+        return msgpack.packb(index)
+    return json.dumps(index).encode()
+
+
+def _unpack_index(raw: bytes) -> Dict:
+    if raw[:1] == b"{":                 # JSON fallback index
+        return json.loads(raw.decode())
+    if msgpack is None:
+        raise RuntimeError("checkpoint index is msgpack but msgpack is not "
+                           "installed")
+    return msgpack.unpackb(raw)
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -38,8 +90,9 @@ def save(path: str, step: int, params, opt_state=None,
          extra: Optional[Dict] = None, level: int = 3):
     tmp = path + ".tmp"
     os.makedirs(tmp, exist_ok=True)
-    index = {"step": int(step), "extra": extra or {}, "leaves": {}}
-    cctx = zstd.ZstdCompressor(level=level)
+    cctx, codec = _compressor(level)
+    index = {"step": int(step), "extra": extra or {}, "codec": codec,
+             "leaves": {}}
     trees = {"params": params}
     if opt_state is not None:
         trees["opt"] = opt_state
@@ -52,7 +105,7 @@ def save(path: str, step: int, params, opt_state=None,
             index["leaves"][f"{tname}/{key}"] = {
                 "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
     with open(os.path.join(tmp, "index.msgpack"), "wb") as f:
-        f.write(msgpack.packb(index))
+        f.write(_pack_index(index))
     if os.path.exists(path):
         shutil.rmtree(path)
     os.replace(tmp, path)
@@ -71,8 +124,8 @@ def restore(path: str, like_params, like_opt=None, shardings=None,
     """Restore into the structure of `like_*` (ShapeDtypeStructs or arrays).
     With `shardings`, leaves are placed sharded (elastic re-shard)."""
     with open(os.path.join(path, "index.msgpack"), "rb") as f:
-        index = msgpack.unpackb(f.read())
-    dctx = zstd.ZstdDecompressor()
+        index = _unpack_index(f.read())
+    dctx = _decompressor(index.get("codec", "zstd"))
 
     def load_tree(tname, like, shards):
         flat_like = _flatten(like)
