@@ -13,13 +13,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig4,fig8,fig9,fig11,fig12,"
-                         "table2,roofline,paged_kv")
+                         "table2,roofline,paged_kv,prefix_cache")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (fig1, fig2, fig4, fig8, fig11, fig12, paged_kv, roofline,
-                   table2)
+    from . import (fig1, fig2, fig4, fig8, fig11, fig12, paged_kv,
+                   prefix_cache, roofline, table2)
     from .common import emit
 
     n_req = 150 if args.quick else 250
@@ -52,6 +52,9 @@ def main() -> None:
         jobs.append(("table2", lambda: table2.run()))
     if not only or "paged_kv" in only:
         jobs.append(("paged_kv", lambda: paged_kv.run()))
+    if not only or "prefix_cache" in only:
+        jobs.append(("prefix_cache",
+                     lambda: prefix_cache.run(quick=args.quick)))
     if not only or "roofline" in only:
         jobs.append(("roofline", roofline.run))
 

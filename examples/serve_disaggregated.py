@@ -1,5 +1,6 @@
 """End-to-end serving driver: DistServe vs colocated on the SAME request
-trace, with a mid-run decode-instance failure to exercise failover.
+trace, a shared-prefix multi-turn run through the radix prefix cache, and
+a mid-run decode-instance failure to exercise failover.
 
     PYTHONPATH=src python examples/serve_disaggregated.py [--arch yi-6b-smoke]
 """
@@ -9,7 +10,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.workload import Request
+from repro.core.workload import Request, WorkloadSpec, sample_multi_turn
 from repro.models.api import build_model
 from repro.serving.cluster import ColocatedCluster, DisaggCluster
 
@@ -19,6 +20,15 @@ def trace(n=12, rate=30.0, seed=0):
     arrive = np.cumsum(rng.exponential(1.0 / rate, n))
     return [Request(i, float(arrive[i]), int(rng.integers(8, 40)),
                     int(rng.integers(4, 10))) for i in range(n)]
+
+
+def chat_trace(cfg, n=8, seed=0):
+    """Multi-turn sessions sharing a 16-token system prompt."""
+    spec = WorkloadSpec("chat", 2.2, 0.4, (4, 24), 1.6, 0.3, (3, 8),
+                        slo_ttft=1.0, slo_tpot=1.0,
+                        sys_len=16, turns=2, share=0.8)
+    return sample_multi_turn(spec, rate=2.0, n=n, seed=seed,
+                             vocab=cfg.vocab_size, think_s=30.0)
 
 
 def summarize(name, res):
@@ -47,6 +57,25 @@ def main():
     colo = ColocatedCluster(cfg, params, n_engines=3, max_batch=4, max_len=96)
     summarize("colocated", colo.run([Request(r.rid, r.arrive, r.in_len,
                                              r.out_len) for r in t]))
+
+    # shared-prefix multi-turn chat through the radix prefix cache
+    ct = chat_trace(cfg)
+    pc = DisaggCluster(cfg, params, n_prefill=1, n_decode=1, max_batch=4,
+                       max_len=128, lm_tokens=96, prefix_cache=True)
+    res = pc.run(ct)
+    summarize("prefix-cache", res)
+    hit = sum(r.prefix_hit for r in res.values())
+    dhit = sum(r.decode_hit for r in res.values())
+    prompt = sum(r.in_len for r in ct)
+    stats = pc.prefix_stats()
+    print(f"  prefix reuse: {hit}/{prompt} prompt tokens prefilled from "
+          f"cache, {dhit} transfer tokens skipped")
+    for side in ("prefill", "decode"):
+        s = stats[side]
+        print(f"  {side:7s} trees: hit_tokens={s.get('hit_tokens', 0):.0f} "
+              f"shared_pages={s.get('matched_pages', 0):.0f} "
+              f"inserted_pages={s.get('inserted_pages', 0):.0f} "
+              f"evictions={s.get('evicted_pages', 0):.0f}")
 
     # failover drill: kill decode instance 1 at t=0.1s
     ft = DisaggCluster(cfg, params, n_prefill=1, n_decode=2,

@@ -94,26 +94,49 @@ class DisaggDispatcher:
 
     Both the simulator and the live cluster route arrivals and KV handoffs
     through one dispatcher, so a test can replay the same trace on both and
-    diff `decisions` entry-by-entry.
+    diff `decisions` entry-by-entry. Decisions are
+    ``(kind, rid, instance, prefix_hit_tokens)`` — the hit length the
+    chosen instance's radix tree reported at decision time (0 when prefix
+    caching is off).
+
+    Prefix-affinity prefill routing: when any instance holds a cached
+    prefix of the request, route to the longest match *unless* that
+    instance's queue is more than `affinity_slack` tokens deeper than the
+    least-loaded queue — beyond that load gap, locality stops paying for
+    the queueing delay and the policy falls back to shortest-queue.
     """
-    decisions: List[Tuple[str, int, int]] = dataclasses.field(
+    affinity_slack: int = 1024          # tokens of queue imbalance tolerated
+    decisions: List[Tuple[str, int, int, int]] = dataclasses.field(
         default_factory=list)
 
     def pick_prefill(self, rid: int, queues: Sequence[FCFSQueue],
-                     alive: Optional[Sequence[int]] = None) -> int:
+                     alive: Optional[Sequence[int]] = None,
+                     hits: Optional[Sequence[int]] = None) -> int:
+        cand = list(range(len(queues)) if alive is None else alive)
+        if hits is not None and max(hits[i] for i in cand) > 0:
+            # longest match; ties -> shortest queue -> lowest index
+            best = min(cand, key=lambda i: (-hits[i],
+                                            queues[i].queued_tokens, i))
+            qmin = min(queues[i].queued_tokens for i in cand)
+            if queues[best].queued_tokens - qmin <= self.affinity_slack:
+                self.decisions.append(("prefill", rid, best, hits[best]))
+                return best
         idx = shortest_queue(queues, alive)
-        self.decisions.append(("prefill", rid, idx))
+        self.decisions.append(("prefill", rid, idx,
+                               hits[idx] if hits is not None else 0))
         return idx
 
     def pick_decode(self, rid: int, loads: Sequence[float],
-                    alive: Optional[Sequence[int]] = None) -> int:
+                    alive: Optional[Sequence[int]] = None,
+                    hits: Optional[Sequence[int]] = None) -> int:
         idx = least_loaded(loads, alive)
-        self.decisions.append(("decode", rid, idx))
+        self.decisions.append(("decode", rid, idx,
+                               hits[idx] if hits is not None else 0))
         return idx
 
     def by_rid(self) -> Dict[int, Dict[str, int]]:
         out: Dict[int, Dict[str, int]] = {}
-        for kind, rid, idx in self.decisions:
+        for kind, rid, idx, _hit in self.decisions:
             out.setdefault(rid, {})[kind] = idx
         return out
 

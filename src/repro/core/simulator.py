@@ -25,6 +25,7 @@ from .latency_model import LatencyModel, Parallelism
 from .scheduler import (DisaggDispatcher, EventLoop, FCFSQueue, PagePool,
                         least_loaded)
 from .workload import Request, WorkloadSpec
+from ..serving.prefix_cache import RadixPrefixCache
 
 
 @dataclasses.dataclass
@@ -100,7 +101,8 @@ def summarize(reqs: List[Request], spec: WorkloadSpec,
 # ---------------------------------------------------------------------------
 
 class _PrefillInstance:
-    def __init__(self, iid, lm: LatencyModel, par: Parallelism, lm_tokens: int):
+    def __init__(self, iid, lm: LatencyModel, par: Parallelism, lm_tokens: int,
+                 tree: Optional[RadixPrefixCache] = None):
         self.iid = iid
         self.lm = lm
         self.par = par
@@ -108,6 +110,8 @@ class _PrefillInstance:
         self.queue: FCFSQueue = FCFSQueue(token_of=lambda r: r.in_len)
         self.inflight = 0            # batches in the pipeline
         self.next_admit = 0.0
+        self.tree = tree             # prefix cache model (matches the live
+                                     # engine's radix tree decisions)
 
     @property
     def queued_tokens(self) -> int:
@@ -132,7 +136,8 @@ def _req_kv_bytes(lm: LatencyModel, r: Request) -> float:
 
 class _DecodeInstance:
     def __init__(self, iid, lm: LatencyModel, par: Parallelism,
-                 pool: PagePool, max_batch: int):
+                 pool: PagePool, max_batch: int,
+                 tree: Optional[RadixPrefixCache] = None):
         self.iid = iid
         self.lm = lm
         self.par = par
@@ -143,17 +148,33 @@ class _DecodeInstance:
         self.arrived: List[Request] = []  # transferred, joins at iter start
         self.in_transfer = 0
         self.busy = False
+        self.tree = tree                 # decode-side shared-prefix model
 
     @property
     def load(self) -> int:
         return (len(self.running) + len(self.pending) + len(self.arrived)
                 + self.in_transfer)
 
+    def charge_pages(self, r: Request) -> int:
+        """Fresh pages a request needs: full residency minus the pages its
+        decode-side shared prefix already holds.
+
+        Approximation: tree-*retained* pages (prefixes kept after their
+        sequences finish) are not charged to the pool. The live engine
+        does keep them resident, but reclaims them LRU on admission
+        pressure (`Engine.can_admit`), so for admission purposes they
+        behave as free; the residual error is the floor of pages actively
+        shared by concurrent sequences (counted once live, zero here)."""
+        full = self.pool.pages_for(_req_kv_bytes(self.lm, r))
+        if self.tree is None or not r.decode_hit:
+            return full
+        page_tokens = self.tree.page_size
+        return max(full - r.decode_hit // page_tokens, 0)
+
     def can_admit(self, r: Request) -> bool:
         resident = len(self.running) + len(self.arrived) + self.in_transfer
         return (resident < self.max_batch
-                and self.pool.can_alloc(
-                    self.pool.pages_for(_req_kv_bytes(self.lm, r))))
+                and self.pool.can_alloc(self.charge_pages(r)))
 
     def ctx_tokens(self) -> float:
         return float(sum(r.in_len + r.tokens_done for r in self.running))
@@ -173,11 +194,20 @@ def simulate_disaggregated(
         num_decode_pages: Optional[int] = None,
         dispatcher: Optional[DisaggDispatcher] = None,
         phase: str = "both",
+        prefix_cache: Optional[bool] = None,
         horizon: float = 1e9) -> Tuple[List[Request], Dict]:
     """Returns (requests with timestamps, extras).
 
     phase="prefill": requests finish at first token (simu_prefill, Alg. 1);
-    phase="decode": prefill is instantaneous (simu_decode, Alg. 1)."""
+    phase="decode": prefill is instantaneous (simu_decode, Alg. 1).
+
+    prefix_cache: model per-instance radix-tree prefix caches — matched
+    prefixes skip prefill compute (suffix-only prefill time) and
+    prefill->decode transfer ships only the suffix the decode instance is
+    missing. Default (None) auto-enables when the trace carries token ids
+    (see `workload.sample_multi_turn`) and the model has per-token KV. The
+    trees and routing policy are the exact classes the live cluster runs,
+    so both report the same prefix-hit routing decisions on one trace."""
     lm_tok = lm_tokens or lm.saturation_tokens(prefill.par)
     cap = (lm.chip.hbm_bytes * decode.par.num_chips * (1 - kv_reserve)
            - lm.param_bytes())
@@ -191,10 +221,17 @@ def simulate_disaggregated(
     n_pages = num_decode_pages if num_decode_pages is not None \
         else max(int(cap // page_bytes), 1)
 
-    P = [_PrefillInstance(i, lm, prefill.par, lm_tok)
+    if prefix_cache is None:
+        prefix_cache = (per_tok > 0
+                        and any(r.tokens is not None for r in reqs))
+    prefix_on = bool(prefix_cache) and per_tok > 0
+
+    P = [_PrefillInstance(i, lm, prefill.par, lm_tok,
+                          RadixPrefixCache(page_tokens) if prefix_on else None)
          for i in range(prefill.count)]
     D = [_DecodeInstance(i, lm, decode.par, PagePool(n_pages, page_bytes),
-                         max_b)
+                         max_b,
+                         RadixPrefixCache(page_tokens) if prefix_on else None)
          for i in range(decode.count)]
     disp = dispatcher or DisaggDispatcher()
     tx = TransferManager(transfer_bw, page_bytes=int(page_bytes),
@@ -214,7 +251,21 @@ def simulate_disaggregated(
                 ev.push(start, "prefill_poke", p)
                 return
             batch = p.form_batch()
-            T = lm.prefill_time([r.in_len for r in batch], p.par)
+            # prefix hits: only the uncached suffix runs through prefill
+            # (match + insert at prefill start, mirroring the live engine,
+            # which matches inside prefill_request and publishes the new
+            # prompt pages before the next request runs)
+            suffix = []
+            for r in batch:
+                if p.tree is not None and r.tokens is not None:
+                    h, _ = p.tree.match(r.tokens)
+                    # live engines keep >= 1 suffix token for the logits
+                    h = min(h, ((r.in_len - 1) // page_tokens) * page_tokens)
+                    r.prefix_hit = h
+                    n_full = (r.in_len // page_tokens) * page_tokens
+                    p.tree.insert(r.tokens[:n_full])
+                suffix.append(r.in_len - r.prefix_hit)
+            T = lm.prefill_time(suffix, p.par)
             p.next_admit = now + T / p.par.pp
             p.inflight += 1
             for r in batch:
@@ -223,16 +274,22 @@ def simulate_disaggregated(
 
     def assign_decode(r: Request, now: float, src: int):
         """Least-loaded decode dispatch + park on the prefill side."""
-        di = disp.pick_decode(r.rid, [d.load for d in D])
-        # wire bytes = prompt KV only (decode positions are produced on the
-        # decode side); page reservation below covers the full residency.
-        # wire time comes from the latency model so calibrated overrides
+        d_hits = None
+        if prefix_on and r.tokens is not None and phase != "decode":
+            d_hits = [d.tree.peek(r.tokens) for d in D]
+        di = disp.pick_decode(r.rid, [d.load for d in D], hits=d_hits)
+        # wire bytes = prompt KV the decode side is missing (decode
+        # positions are produced there; a shared prefix already resides
+        # there); page reservation below covers the full residency. wire
+        # time comes from the latency model so calibrated overrides
         # (benchmarks/table2) take effect.
         if phase == "decode":
             nbytes, wire_s = 0.0, 0.0
         else:
-            nbytes = kv_bytes(lm.cfg, r.in_len, lm.dtype_bytes)
-            wire_s = lm.kv_transfer_time(r.in_len, transfer_bw)
+            r.decode_hit = d_hits[di] if d_hits else 0
+            ship = r.in_len - r.decode_hit
+            nbytes = kv_bytes(lm.cfg, ship, lm.dtype_bytes) if ship else 0.0
+            wire_s = lm.kv_transfer_time(ship, transfer_bw) if ship else 0.0
         tx.park(r.rid, r, nbytes, now, src=src, wire_s=wire_s)
         D[di].pending.append(r)
         ev.push(now, "decode_poke", D[di])
@@ -241,8 +298,12 @@ def simulate_disaggregated(
         """Pull-based admission: reserve pages, then pull over the link."""
         while d.pending and d.can_admit(d.pending[0]):
             r = d.pending.pop(0)
-            d.pool.alloc(r.rid, d.pool.pages_for(_req_kv_bytes(lm, r)))
+            d.pool.alloc(r.rid, d.charge_pages(r))
             d.in_transfer += 1
+            if d.tree is not None and r.tokens is not None:
+                d.tree.match(r.tokens)      # LRU bump, mirrors insert_kv
+                n_full = (r.in_len // page_tokens) * page_tokens
+                d.tree.insert(r.tokens[:n_full])
             _, t_done = tx.pull(r.rid, now, dst=d.iid)
             ev.push(t_done, "transfer_done", (d, r))
 
@@ -273,7 +334,10 @@ def simulate_disaggregated(
                 r.first_token = t_now
                 assign_decode(r, t_now, src=0)
                 continue
-            pi = disp.pick_prefill(r.rid, [p.queue for p in P])
+            hits = None
+            if prefix_on and r.tokens is not None:
+                hits = [p.tree.peek(r.tokens) for p in P]
+            pi = disp.pick_prefill(r.rid, [p.queue for p in P], hits=hits)
             P[pi].queue.push(r)
             ev.push(t_now, "prefill_poke", P[pi])
         elif kind == "prefill_poke":
@@ -318,6 +382,7 @@ def simulate_disaggregated(
         "kv_total": tx.total_time,
         "kv_p95": _percentile(tx.times, 0.95),
         "kv_chunks": tx.total_chunks,
+        "kv_bytes": tx.total_bytes,
         "parked_bytes_peak": tx.peak_parked_bytes,
         "decisions": disp.decisions,
         "breakdown": {"prefill_busy_s": busy_prefill,
@@ -325,6 +390,15 @@ def simulate_disaggregated(
                       "lm_tokens": lm_tok, "max_decode_batch": max_b,
                       "decode_pages": n_pages},
     }
+    if prefix_on:
+        prompt_tokens = sum(r.in_len for r in reqs)
+        extras["prefix"] = {
+            "hit_tokens": sum(r.prefix_hit for r in reqs),
+            "decode_hit_tokens": sum(r.decode_hit for r in reqs),
+            "prompt_tokens": prompt_tokens,
+            "prefill_trees": [p.tree.stats.as_dict() for p in P],
+            "decode_trees": [d.tree.stats.as_dict() for d in D],
+        }
     return reqs, extras
 
 

@@ -19,6 +19,10 @@ class Request:
     arrive: float
     in_len: int
     out_len: int
+    # prompt token ids; None -> lengths-only request (no prefix matching).
+    # When set, len(tokens) == in_len and the live cluster feeds these ids
+    # to the engines, so simulator and cluster see the same prefixes.
+    tokens: Optional[Tuple[int, ...]] = None
     # filled by the simulator / engine
     prefill_start: float = -1.0
     first_token: float = -1.0      # TTFT reference point
@@ -26,6 +30,8 @@ class Request:
     decode_admit: float = -1.0
     finish: float = -1.0
     tokens_done: int = 0
+    prefix_hit: int = 0            # prefill-side cached-prefix tokens
+    decode_hit: int = 0            # decode-side shared-prefix tokens
 
     @property
     def ttft(self) -> float:
@@ -49,6 +55,13 @@ class WorkloadSpec:
     out_clip: Tuple[int, int]
     slo_ttft: float     # seconds (paper Table 1 scale)
     slo_tpot: float
+    # shared-prefix / multi-turn shape (0/1/0.0 -> plain independent
+    # single-turn requests, the paper's original workloads). When any is
+    # set, `sample_requests` emits explicit token ids so the prefix cache
+    # (engine + simulator) can match them.
+    sys_len: int = 0            # system-prompt tokens heading every prompt
+    turns: int = 1              # requests per chat session (history grows)
+    share: float = 0.0          # fraction of sessions on the shared prompt
 
 
 SHAREGPT = WorkloadSpec("sharegpt", 5.0, 1.2, (4, 2048), 5.0, 1.0, (4, 2048),
@@ -109,6 +122,8 @@ def derive_slos(spec: WorkloadSpec, latency_model,
 
 def sample_requests(spec: WorkloadSpec, rate: float, n: int,
                     seed: int = 0) -> List[Request]:
+    if spec.turns > 1 or spec.sys_len > 0:
+        return sample_multi_turn(spec, rate, n, seed=seed)
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, size=n)
     arrive = np.cumsum(gaps)
@@ -118,6 +133,62 @@ def sample_requests(spec: WorkloadSpec, rate: float, n: int,
                        *spec.out_clip)
     return [Request(i, float(arrive[i]), int(in_lens[i]), int(out_lens[i]))
             for i in range(n)]
+
+
+def sample_multi_turn(spec: WorkloadSpec, rate: float, n: int, *,
+                      seed: int = 0, vocab: int = 32000,
+                      think_s: Optional[float] = None) -> List[Request]:
+    """Shared-prefix / multi-turn trace with explicit token ids (Nexus /
+    "Inference without Interference": workload-aware disaggregation).
+
+    Sessions arrive Poisson at ``rate / turns`` (total request rate stays
+    ~``rate``). A fraction ``share`` of sessions opens with one global
+    system prompt (``sys_len`` tokens — the cross-session shared prefix);
+    the rest get private system prompts of the same length. Within a
+    session, turn k's prompt is turn k-1's prompt + a stand-in assistant
+    reply + fresh user tokens, so consecutive turns share a growing prefix
+    (the multi-turn reuse the radix tree monetizes). Turn k+1 arrives a
+    think-time gap after turn k. Prompts are trimmed to ``in_clip[1]``;
+    a session whose history hits the cap restarts its context.
+
+    The stand-in reply tokens are *not* the model's actual outputs — the
+    trace is open-loop — but prefix matching only needs the bytes to be
+    identical across requests, which they are.
+    """
+    assert spec.sys_len >= 0 and spec.turns >= 1
+    rng = np.random.default_rng(seed)
+    think = think_s if think_s is not None else max(2.0 / max(rate, 1e-9), 0.5)
+    shared_sys = rng.integers(1, vocab, size=spec.sys_len).tolist()
+    n_sessions = max(-(-n // spec.turns), 1)
+    sess_rate = rate / spec.turns
+    starts = np.cumsum(rng.exponential(1.0 / sess_rate, size=n_sessions))
+    cap = spec.in_clip[1]
+    reqs: List[Request] = []
+    for s in range(n_sessions):
+        if spec.sys_len and rng.random() < spec.share:
+            history = list(shared_sys)
+        else:
+            history = rng.integers(1, vocab, size=spec.sys_len).tolist()
+        t = float(starts[s])
+        for _ in range(spec.turns):
+            u = int(np.clip(rng.lognormal(spec.in_mu, spec.in_sigma),
+                            *spec.in_clip))
+            out = int(np.clip(rng.lognormal(spec.out_mu, spec.out_sigma),
+                              *spec.out_clip))
+            if len(history) + u > cap:          # context-cap reset
+                history = history[:spec.sys_len]
+            u = min(u, max(cap - len(history), 1))
+            prompt = history + rng.integers(1, vocab, size=u).tolist()
+            reqs.append(Request(0, t, len(prompt), out,
+                                tokens=tuple(prompt)))
+            # stand-in assistant reply extends the next turn's prefix
+            history = prompt + rng.integers(1, vocab, size=out).tolist()
+            t += float(rng.exponential(think)) + 1e-3
+    reqs.sort(key=lambda r: r.arrive)
+    reqs = reqs[:n] if n else reqs
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
 
 
 def fit_spec(reqs: List[Request], name: str = "fitted",

@@ -142,13 +142,26 @@ def _qkv(p, x, cfg, positions, theta):
     return q, k, v
 
 
-def attn_full(p, x, cfg, kind, positions, attn_blocks=(512, 512)):
-    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+def attn_full(p, x, cfg, kind, positions, attn_blocks=(512, 512),
+              prefix=None):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v)).
+
+    `prefix` is an optional (k, v) pair of already-roped cached KV for
+    positions before this chunk (shape (B, P, Hkv, hd)): queries attend
+    over [prefix, self] with the causal offset handled by
+    `flash_reference`'s Sq < Skv masking. The returned cache carries only
+    this chunk's KV — the prefix stays where it was cached."""
     window = cfg.sliding_window if _is_windowed(kind, cfg) else 0
+    assert prefix is None or window == 0, "prefix reuse needs full attention"
     q, k, v = _qkv(p, x, cfg, positions, _rope_theta(kind, cfg))
     q = shard(q, "batch", None, "heads", None)
     k = shard(k, "batch", None, "kv_heads", None)
-    o = flash_reference(q, k, v, causal=True, window=window,
+    ka, va = k, v
+    if prefix is not None:
+        pk, pv = prefix
+        ka = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        va = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+    o = flash_reference(q, ka, va, causal=True, window=window,
                         block_q=attn_blocks[0], block_kv=attn_blocks[1],
                         logit_softcap=cfg.attn_logit_softcap)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype)), (k, v)
@@ -194,9 +207,10 @@ def embed_tokens(params, tokens, cfg, frontend_embeds=None):
     return x
 
 
-def _layer_body(x, pl, cfg, kind, positions, attn_blocks):
+def _layer_body(x, pl, cfg, kind, positions, attn_blocks, prefix=None):
     h = apply_norm(x, pl["ln1"], cfg)
-    a, kv = attn_full(pl["attn"], h, cfg, kind, positions, attn_blocks)
+    a, kv = attn_full(pl["attn"], h, cfg, kind, positions, attn_blocks,
+                      prefix=prefix)
     x = x + a
     h = apply_norm(x, pl["ln2"], cfg)
     f, aux = _ffn(pl, h, cfg, kind)
@@ -206,17 +220,35 @@ def _layer_body(x, pl, cfg, kind, positions, attn_blocks):
 
 
 def forward(params, tokens, cfg, *, frontend_embeds=None, remat=False,
-            attn_blocks=(512, 512), return_cache=False, max_len=None):
-    """Full-sequence forward. tokens: (B, S_text). Returns (logits, cache, aux)."""
+            attn_blocks=(512, 512), return_cache=False, max_len=None,
+            prefix_kv=None, pos_offset=0, last_pos=None):
+    """Full-sequence forward. tokens: (B, S_text). Returns (logits, cache, aux).
+
+    Prefix reuse (serving prefix cache): `prefix_kv` maps segment names to
+    {"k", "v"} arrays of shape (layers, B, P, Hkv, hd) holding the cached,
+    already-roped KV of the first P prompt positions; `tokens` then covers
+    only the uncached suffix and `pos_offset` (= P) shifts its rope
+    positions. `last_pos` picks which position's logits to return when
+    `return_cache` (defaults to the final one — callers that right-pad
+    pass the last *real* index)."""
     x = embed_tokens(params, tokens, cfg, frontend_embeds)
     x = shard(x, "batch", None, "embed_act")
     B, S, _ = x.shape
-    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    positions = (jnp.asarray(pos_offset, jnp.int32)
+                 + jnp.arange(S, dtype=jnp.int32))[None, :]
     aux_total = 0.0
     cache: Dict[str, Any] = {}
     for i, seg in enumerate(layer_plan(cfg)):
-        def body(x, pl, _kind=seg.kind):
-            x, kv, aux = _layer_body(x, pl, cfg, _kind, positions, attn_blocks)
+        pkv = prefix_kv.get(f"seg{i}") if prefix_kv is not None else None
+
+        def body(x, layer, _kind=seg.kind, _pkv=pkv):
+            if _pkv is None:
+                pl, prefix = layer, None
+            else:
+                pl, pk_l, pv_l = layer
+                prefix = (pk_l, pv_l)
+            x, kv, aux = _layer_body(x, pl, cfg, _kind, positions, attn_blocks,
+                                     prefix=prefix)
             if not return_cache:
                 kv = (jnp.zeros((), x.dtype),) * 2  # don't carry KV in train
             return x, (kv, aux)
@@ -224,7 +256,9 @@ def forward(params, tokens, cfg, *, frontend_embeds=None, remat=False,
             body = jax.checkpoint(
                 body, policy=jax.checkpoint_policies.nothing_saveable,
                 static_argnums=())
-        x, (kvs, auxs) = jax.lax.scan(body, x, params[f"seg{i}"])
+        xs = (params[f"seg{i}"] if pkv is None
+              else (params[f"seg{i}"], pkv["k"], pkv["v"]))
+        x, (kvs, auxs) = jax.lax.scan(body, x, xs)
         aux_total = aux_total + jnp.sum(auxs)
         if return_cache:
             k_seg, v_seg = kvs
@@ -244,8 +278,14 @@ def forward(params, tokens, cfg, *, frontend_embeds=None, remat=False,
     if return_cache:
         # prefill only needs the last position's logits — computing the
         # full (B,S,V) tensor would cost ~V/d extra memory (§Perf)
-        logits = unembed(params, x[:, -1], cfg)[:, None]
-        cache["pos"] = jnp.full((B,), S, jnp.int32)
+        if last_pos is None:
+            x_last = x[:, -1]
+        else:
+            lp = jnp.broadcast_to(jnp.asarray(last_pos, jnp.int32), (B,))
+            x_last = jnp.take_along_axis(x, lp[:, None, None], axis=1)[:, 0]
+        logits = unembed(params, x_last, cfg)[:, None]
+        cache["pos"] = jnp.full((B,), S, jnp.int32) + jnp.asarray(
+            pos_offset, jnp.int32)
     else:
         logits = unembed(params, x, cfg)
     return logits, cache, aux_total

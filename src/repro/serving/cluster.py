@@ -30,11 +30,28 @@ class ServedResult:
     ttft: float
     tpot: float
     finish: float
+    prefix_hit: int = 0        # prompt tokens served from the prefill-side
+                               # radix tree (prefill compute skipped)
+    decode_hit: int = 0        # prompt tokens already resident on the
+                               # decode side (transfer bytes skipped)
 
 
 def _page_bytes(cfg, page_size: int, dtype_bytes: int = 2) -> Optional[int]:
     per_tok = cfg.kv_bytes_per_token(dtype_bytes)
     return per_tok * page_size if per_tok else None
+
+
+def _slice_blob(blob, skip_tokens: int):
+    """Drop the first `skip_tokens` positions from a migration blob — the
+    decode side already holds that prefix, so only the suffix ships."""
+    cache, n_tok = blob
+    if not skip_tokens:
+        return blob
+    sliced = {k: ({"k": v["k"][:, :, skip_tokens:],
+                   "v": v["v"][:, :, skip_tokens:]}
+                  if k.startswith("seg") else v)
+              for k, v in cache.items()}
+    return sliced, n_tok
 
 
 class DisaggCluster:
@@ -45,16 +62,26 @@ class DisaggCluster:
                  transfer_bandwidth: float = 50e9, lm_tokens: int = 256,
                  attn_blocks=(64, 64), page_size: int = 16,
                  decode_num_pages: Optional[int] = None,
-                 paged: Optional[bool] = None):
+                 paged: Optional[bool] = None,
+                 prefix_cache: bool = False,
+                 prefill_num_pages: Optional[int] = None):
         self.cfg = cfg
+        if prefix_cache and prefill_num_pages is None:
+            # a prefill engine's default pool (one resident sequence) has
+            # no room to retain prefixes; keep a few sequences' worth
+            prefill_num_pages = 8 * -(-max_len // page_size) + 1
+        self.prefix_cache = prefix_cache
         self.prefill = [Engine(cfg, params, max_batch=1, max_len=max_len,
                                attn_blocks=attn_blocks, paged=paged,
-                               page_size=page_size)
+                               page_size=page_size,
+                               num_pages=prefill_num_pages,
+                               prefix_cache=prefix_cache)
                         for _ in range(n_prefill)]
         self.decode = [Engine(cfg, params, max_batch=max_batch,
                               max_len=max_len, attn_blocks=attn_blocks,
                               paged=paged, page_size=page_size,
-                              num_pages=decode_num_pages)
+                              num_pages=decode_num_pages,
+                              prefix_cache=prefix_cache)
                        for _ in range(n_decode)]
         self.queues = [FCFSQueue(token_of=lambda s: len(s.tokens))
                        for _ in range(n_prefill)]
@@ -95,8 +122,11 @@ class DisaggCluster:
         rng = np.random.default_rng(0)
         seqs: Dict[int, Sequence] = {}
         for r in requests:
-            toks = rng.integers(1, self.cfg.vocab_size,
-                                size=r.in_len).tolist()
+            if r.tokens is not None:    # shared-prefix traces carry ids
+                toks = [int(t) % self.cfg.vocab_size for t in r.tokens]
+            else:
+                toks = rng.integers(1, self.cfg.vocab_size,
+                                    size=r.in_len).tolist()
             seqs[r.rid] = Sequence(r.rid, toks, r.out_len)
 
         ev = EventLoop()
@@ -123,8 +153,11 @@ class DisaggCluster:
         def _finish(req, seq, t):
             ttft = req.first_token - req.arrive
             tpot = ((req.finish - req.first_token) / max(seq.out_len - 1, 1))
+            req.prefix_hit = seq.prefix_hit
+            req.decode_hit = seq.decode_hit
             results[req.rid] = ServedResult(req.rid, seq.tokens, ttft, tpot,
-                                            req.finish)
+                                            req.finish, seq.prefix_hit,
+                                            seq.decode_hit)
 
         def poke_prefill(i, now):
             if i in self.failed_prefill or not self.queues[i].items:
@@ -144,9 +177,9 @@ class DisaggCluster:
                     req.finish = now + dt
                     _finish(req, seq, now + dt)
                 else:
-                    nbytes = kv_bytes(self.cfg, len(seq.tokens) - 1)
-                    self.tx.park(seq.rid, blob, nbytes, now + dt, src=i)
-                    ev.push(now + dt, "dispatch_decode", (req, seq))
+                    # decode target (and hence shipped bytes) is chosen at
+                    # dispatch time, where the decode-side prefix is known
+                    ev.push(now + dt, "dispatch_decode", (req, seq, blob, i))
                 p_free[i] = now + dt
                 ev.push(now + dt, "poke_prefill", i)
 
@@ -157,13 +190,33 @@ class DisaggCluster:
                 ev.push(d_free[i], "poke_decode", i)
                 return
             d = self.decode[i]
-            # pull-based admission against free KV pages (paper §4.3)
-            while d_pending[i] and d.can_admit(d_pending[i][0][1]):
-                req, seq = d_pending[i].pop(0)
-                blob, t_done = self.tx.pull(seq.rid, now, dst=i)
-                d.insert_kv(seq, blob)
-                req.decode_admit = max(now, t_done)
-                d_active[i].append(seq)
+
+            # pull-based admission against free KV pages (paper §4.3);
+            # shared prefix pages are already resident, so only the
+            # suffix needs fresh pages
+            def admit_ready():
+                while d_pending[i] and d.can_admit(d_pending[i][0][1],
+                                                   len(d_pending[i][0][3])):
+                    req, seq, skip, pinned = d_pending[i].pop(0)
+                    (blob, _, _), t_done = self.tx.pull(seq.rid, now, dst=i)
+                    d.insert_kv(seq, _slice_blob(blob, skip), shared=pinned,
+                                skip_tokens=skip)
+                    d.unpin(pinned)
+                    req.decode_admit = max(now, t_done)
+                    d_active[i].append(seq)
+
+            admit_ready()
+            if d_pending[i] and not d_active[i]:
+                # liveness fallback: nothing is running (so no future poke
+                # will fire) and the head still can't admit — its eviction
+                # is blocked by pages pinned for *later* pending requests.
+                # Drop every pin (those requests fall back to a full-blob
+                # transfer); with no pins and nothing running, the head's
+                # residency always fits after LRU eviction.
+                for j, (rq, sq, _skip, pinned) in enumerate(d_pending[i]):
+                    d.unpin(pinned)
+                    d_pending[i][j] = (rq, sq, 0, [])
+                admit_ready()
             d._active = d_active[i]
             if not d_active[i]:
                 return
@@ -181,6 +234,12 @@ class DisaggCluster:
             d_active[i] = still
             ev.push(done_t, "poke_decode", i)
 
+        def prefill_hits(tokens):
+            if not self.prefix_cache:
+                return None
+            return [self.prefill[i].prefix_peek(tokens)
+                    for i in range(len(self.prefill))]
+
         while ev:
             t, kind, payload = ev.pop()
             if kind == "arrive":
@@ -188,18 +247,31 @@ class DisaggCluster:
                 seq = seqs[r.rid]
                 seq._req = r
                 qi = self.dispatcher.pick_prefill(r.rid, self.queues,
-                                                  alive_p())
+                                                  alive_p(),
+                                                  hits=prefill_hits(seq.tokens))
                 self.queues[qi].push(seq)
                 ev.push(t, "poke_prefill", qi)
             elif kind == "poke_prefill":
                 poke_prefill(payload, t)
             elif kind == "dispatch_decode":
-                req, seq = payload
+                req, seq, blob, src = payload
                 alive = alive_d()
                 loads = [len(d_active[i]) + len(d_pending[i])
                          for i in range(len(self.decode))]
-                di = self.dispatcher.pick_decode(req.rid, loads, alive)
-                d_pending[di].append((req, seq))
+                n_tok = blob[1]
+                d_hits = None
+                if self.prefix_cache:
+                    d_hits = [self.decode[i].prefix_peek(seq.tokens[:n_tok])
+                              for i in range(len(self.decode))]
+                di = self.dispatcher.pick_decode(req.rid, loads, alive,
+                                                 hits=d_hits)
+                # pin the decode-resident prefix and ship only the rest
+                skip, pinned = self.decode[di].pin_prefix(seq.tokens[:n_tok])
+                ship = n_tok - skip
+                nbytes = kv_bytes(self.cfg, ship) if ship else 0
+                self.tx.park(seq.rid, (blob, skip, pinned), nbytes, t,
+                             src=src)
+                d_pending[di].append((req, seq, skip, pinned))
                 ev.push(t, "poke_decode", di)
             elif kind == "poke_decode":
                 poke_decode(payload, t)
@@ -211,17 +283,36 @@ class DisaggCluster:
                     seq = seqs[rid]
                     self.decode[idx].release(seq)
                     seq.done = False
-                    qi = self.dispatcher.pick_prefill(rid, self.queues,
-                                                      alive_p())
+                    qi = self.dispatcher.pick_prefill(
+                        rid, self.queues, alive_p(),
+                        hits=prefill_hits(seq.tokens))
                     self.queues[qi].push(seq)
                     ev.push(t, "poke_prefill", qi)
                 d_active[idx] = []
-                # also re-route ready-but-unpulled requests
+                # also re-route ready-but-unpulled requests (drop the dead
+                # instance's prefix pin; the new target re-pins its own)
                 moved = d_pending[idx]
                 d_pending[idx] = []
-                for req, seq in moved:
-                    ev.push(t, "dispatch_decode", (req, seq))
+                for req, seq, _skip, pinned in moved:
+                    self.decode[idx].unpin(pinned)
+                    parked = self.tx.parked.pop(req.rid)
+                    blob = parked.blob[0]
+                    ev.push(t, "dispatch_decode",
+                            (req, seq, blob, parked.src))
         return results
+
+    # -- prefix-cache stats ----------------------------------------------
+    def prefix_stats(self) -> Dict[str, Any]:
+        """Aggregate radix-tree stats across the fleet (per-side)."""
+        def agg(engines):
+            out: Dict[str, float] = {}
+            for e in engines:
+                if not e.prefix_caching:
+                    continue
+                for k, v in e.prefix_cache.stats.as_dict().items():
+                    out[k] = out.get(k, 0) + v
+            return out
+        return {"prefill": agg(self.prefill), "decode": agg(self.decode)}
 
 
 class ColocatedCluster:
@@ -252,7 +343,11 @@ class ColocatedCluster:
         free_at = [0.0] * len(self.engines)
 
         for r in requests:
-            toks = rng.integers(1, self.cfg.vocab_size, size=r.in_len).tolist()
+            if r.tokens is not None:
+                toks = [int(t) % self.cfg.vocab_size for t in r.tokens]
+            else:
+                toks = rng.integers(1, self.cfg.vocab_size,
+                                    size=r.in_len).tolist()
             s = Sequence(r.rid, toks, r.out_len)
             s._req = r
             ev.push(r.arrive, "arrive", (r, s))

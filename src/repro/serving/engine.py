@@ -29,6 +29,7 @@ import numpy as np
 
 from ..models.api import build_model, supports_paged
 from .kv_cache import KVCacheManager, TRASH_PAGE
+from .prefix_cache import RadixPrefixCache
 
 _BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 
@@ -41,6 +42,8 @@ class Sequence:
     slot: int = -1
     produced: int = 0
     done: bool = False
+    prefix_hit: int = 0         # prefill-side cached-prefix tokens
+    decode_hit: int = 0         # decode-side shared-prefix tokens
 
 
 class Engine:
@@ -48,7 +51,8 @@ class Engine:
                  max_len: int = 512, seed: int = 0, attn_blocks=(128, 128),
                  dtype=jnp.float32, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 paged: Optional[bool] = None):
+                 paged: Optional[bool] = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.dtype = dtype
@@ -65,7 +69,8 @@ class Engine:
             else (paged and supports_paged(cfg))
         self.clock = 0.0                      # virtual seconds
         self.steps = 0
-        self.prefill_tokens = 0
+        self.prefill_tokens = 0               # tokens actually computed
+        self.prefix_hit_tokens = 0            # tokens served from the tree
         self.decode_tokens = 0
         if self.paged:
             pps = -(-max_len // page_size)
@@ -76,10 +81,16 @@ class Engine:
             self._kv = KVCacheManager(num_pages, page_size, max_len)
         else:
             self._kv = None
+        self.prefix_caching = bool(prefix_cache and self.paged)
+        self.prefix_cache = (RadixPrefixCache(page_size, allocator=self._kv)
+                             if self.prefix_caching else None)
         self._cache = self._empty_cache()
         self._slot_free = list(range(max_batch))
         self._prefill_fn: Dict[int, Any] = {}
+        self._suffix_fn: Dict[Tuple[int, int], Any] = {}
         self._insert_fn: Dict[Tuple[int, int], Any] = {}
+        self._gather_fn: Dict[int, Any] = {}
+        self._write_fn: Dict[Tuple[int, int], Any] = {}
 
         if self.paged:
             def _decode(params, cache, tokens):
@@ -105,16 +116,93 @@ class Engine:
             # paged engines emit a bucket-sized cache (the migration blob);
             # slab engines pad to max_len so the merge is a pure slot write
             target_len = None if self.paged else self.max_len
-            def _pf(params, toks):
+            # exact-length families take the final position's logits anyway
+            # and their forward() signatures don't accept last_pos
+            exact = self.exact_len
+
+            def _pf(params, toks, last_pos):
+                mod = self.model
+                from ..models import api as _api
+                m = _api._mod(mod.cfg)
+                kw = {} if exact else {"last_pos": last_pos}
+                logits, cache, _ = m.forward(
+                    params, toks, mod.cfg, attn_blocks=self.attn_blocks,
+                    return_cache=True, max_len=target_len, **kw)
+                return logits, cache
+            self._prefill_fn[bucket] = jax.jit(_pf)
+        return self._prefill_fn[bucket]
+
+    def _get_suffix_prefill_fn(self, bucket: int, n_prefix_pages: int):
+        """Prefill only the uncached suffix: queries attend over the
+        gathered prefix KV + themselves (exact attention, offset causal
+        mask), so the returned logits/KV match a full prefill."""
+        key = (bucket, n_prefix_pages)
+        if key not in self._suffix_fn:
+            def _sf(params, toks, prefix_kv, offset, last_pos):
                 mod = self.model
                 from ..models import api as _api
                 m = _api._mod(mod.cfg)
                 logits, cache, _ = m.forward(
                     params, toks, mod.cfg, attn_blocks=self.attn_blocks,
-                    return_cache=True, max_len=target_len)
+                    return_cache=True, max_len=None, prefix_kv=prefix_kv,
+                    pos_offset=offset, last_pos=last_pos)
                 return logits, cache
-            self._prefill_fn[bucket] = jax.jit(_pf)
-        return self._prefill_fn[bucket]
+            self._suffix_fn[key] = jax.jit(_sf)
+        return self._suffix_fn[key]
+
+    def _get_gather_fn(self, n_pages: int):
+        """Gather `n_pages` pool pages into a dense (layers, 1, n*ps, Hkv,
+        hd) per-segment blob — used both as the suffix prefill's prefix KV
+        and as the migration blob shipped to the decode side."""
+        if n_pages not in self._gather_fn:
+            ps = self._kv.page_size
+            seg_names = [k for k in self._cache if k.startswith("seg")]
+
+            def _g(cache, ids):
+                out = {}
+                for name in seg_names:
+                    o = {}
+                    for part in ("k", "v"):
+                        pool = cache[name][part]   # (L, num_pages, ps, H, hd)
+                        sel = pool[:, ids]
+                        o[part] = sel.reshape(
+                            pool.shape[0], n_pages * ps, *pool.shape[3:]
+                        )[:, None]
+                    out[name] = o
+                return out
+            self._gather_fn[n_pages] = jax.jit(_g)
+        return self._gather_fn[n_pages]
+
+    def _get_page_write_fn(self, n_splice: int, src_len: int):
+        """Scatter a dense (layers, 1, src_len, Hkv, hd) blob into pool
+        pages (the prefill-side twin of the insert splice — no block-table
+        or pos rows, the prefill engine keeps those host-side)."""
+        key = (n_splice, src_len)
+        if key not in self._write_fn:
+            ps = self._kv.page_size
+
+            def _w(dst, src_segs, splice_ids):
+                out = dict(dst)
+                span = n_splice * ps
+                for name, seg in src_segs.items():
+                    k_src, v_src = seg["k"][:, 0], seg["v"][:, 0]
+                    if src_len > span:
+                        k_src, v_src = k_src[:, :span], v_src[:, :span]
+                    elif src_len < span:
+                        pad = [(0, 0), (0, span - src_len), (0, 0), (0, 0)]
+                        k_src, v_src = jnp.pad(k_src, pad), jnp.pad(v_src, pad)
+                    n = k_src.shape[0]
+                    shp = (n, n_splice, ps) + k_src.shape[2:]
+                    dk, dv = dst[name]["k"], dst[name]["v"]
+                    out[name] = {
+                        "k": dk.at[:, splice_ids].set(
+                            k_src.reshape(shp).astype(dk.dtype)),
+                        "v": dv.at[:, splice_ids].set(
+                            v_src.reshape(shp).astype(dv.dtype)),
+                    }
+                return out
+            self._write_fn[key] = jax.jit(_w, donate_argnums=(0,))
+        return self._write_fn[key]
 
     # ---- public API -----------------------------------------------------
     def has_slot(self) -> bool:
@@ -135,37 +223,153 @@ class Engine:
         appends one token and bumps `produced` together)."""
         return len(seq.tokens) - 1 + seq.out_len - seq.produced
 
-    def can_admit(self, seq: Sequence) -> bool:
+    def can_admit(self, seq: Sequence, n_shared_pages: int = 0) -> bool:
         """Pull-based admission signal: a free batch slot AND enough free
-        KV pages for the whole residency (paper §4.3)."""
+        KV pages for the whole residency (paper §4.3). Shared prefix pages
+        don't need fresh pages, so admission gets easier with reuse. Under
+        pressure, cached-but-unreferenced prefix subtrees are reclaimed
+        (LRU) before rejecting — retained prefixes must never starve
+        admission."""
         if not self._slot_free:
             return False
         if not self.paged:
             return True
-        return self._kv.can_admit(self.tokens_needed(seq))
+        need = self._kv.pages_for(self.tokens_needed(seq)) - n_shared_pages
+        if need > self._kv.free_pages and self.prefix_caching:
+            self.prefix_cache.evict(need - self._kv.free_pages)
+        return self._kv.can_admit(self.tokens_needed(seq), n_shared_pages)
+
+    # ---- prefix-cache surface ------------------------------------------
+    def prefix_peek(self, tokens) -> int:
+        """Routing probe: longest cached prefix (tokens), no LRU bump."""
+        return self.prefix_cache.peek(tokens) if self.prefix_caching else 0
+
+    def pin_prefix(self, tokens) -> Tuple[int, List[int]]:
+        """Match + take a reference on the hit pages so they survive until
+        `insert_kv` (eviction skips referenced pages). Returns
+        (hit_tokens, page_ids); release with `unpin`."""
+        if not self.prefix_caching:
+            return 0, []
+        hit, pages = self.prefix_cache.match(tokens)
+        if pages:
+            self._kv.acquire(pages)
+        return hit, pages
+
+    def unpin(self, pages: List[int]):
+        if pages:
+            self._kv.release(pages)
+
+    def _bucket(self, n: int) -> int:
+        b = next((b for b in _BUCKETS if n <= b), n)
+        return min(max(b, n), self.max_len)
 
     def prefill_request(self, seq: Sequence) -> Tuple[int, Any, float]:
-        """Run prefill; returns (first_token, kv_blob, step_time)."""
+        """Run prefill; returns (first_token, kv_blob, step_time).
+
+        With the prefix cache on, only the uncached suffix runs through
+        the prefill kernel: the longest page-aligned cached prefix (capped
+        so at least one suffix token remains to produce the first output
+        logits) is gathered from the page pools and attended as context.
+        The new full prompt pages are inserted into the radix tree for
+        later requests, and the blob handed to the transfer layer is
+        stitched from shared + fresh pages."""
         toks = np.asarray(seq.tokens, np.int32)
         S = len(toks)
         assert S < self.max_len, (S, self.max_len)
+        if self.prefix_caching:
+            return self._prefill_with_prefix(seq, toks)
         if self.exact_len:
             bucket = S
         else:
-            bucket = next((b for b in _BUCKETS if S <= b), S)
-            bucket = min(max(bucket, S), self.max_len)
+            bucket = self._bucket(S)
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :S] = toks                                  # right-pad
         fn = self._get_prefill_fn(bucket)
         t0 = time.perf_counter()
-        logits, cache = fn(self.params, jnp.asarray(padded))
+        logits, cache = fn(self.params, jnp.asarray(padded),
+                           jnp.asarray(S - 1, jnp.int32))
         logits.block_until_ready()
         dt = time.perf_counter() - t0
         self.clock += dt
         self.steps += 1
         self.prefill_tokens += S
-        first = int(jnp.argmax(logits[0, S - 1]))
+        first = int(jnp.argmax(logits[0, 0]))
         return first, (cache, S), dt
+
+    def _prefill_with_prefix(self, seq: Sequence, toks) -> Tuple[int, Any, float]:
+        ps = self._kv.page_size
+        S = len(toks)
+        token_list = [int(t) for t in toks]
+        hit, hit_pages = self.prefix_cache.match(token_list)
+        # keep >= 1 suffix token: the first output comes from its logits
+        hit = min(hit, ((S - 1) // ps) * ps)
+        hit_pages = hit_pages[:hit // ps]
+        if hit_pages:
+            self._kv.acquire(hit_pages)     # pin across compute + eviction
+        suffix = toks[hit:]
+        Ssuf = len(suffix)
+        bucket = self._bucket(Ssuf)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :Ssuf] = suffix
+        t0 = time.perf_counter()
+        if hit:
+            prefix_kv = self._get_gather_fn(len(hit_pages))(
+                self._cache, jnp.asarray(hit_pages, jnp.int32))
+            fn = self._get_suffix_prefill_fn(bucket, len(hit_pages))
+            logits, cache = fn(self.params, jnp.asarray(padded), prefix_kv,
+                               jnp.asarray(hit, jnp.int32),
+                               jnp.asarray(Ssuf - 1, jnp.int32))
+        else:
+            fn = self._get_prefill_fn(bucket)
+            logits, cache = fn(self.params, jnp.asarray(padded),
+                               jnp.asarray(Ssuf - 1, jnp.int32))
+        first = int(jnp.argmax(logits[0, 0]))
+
+        # the migration blob is stitched host-of-pool: already-gathered
+        # prefix KV + the freshly computed suffix (never a second gather
+        # of the hit pages)
+        blob_cache = {}
+        for name, seg in cache.items():
+            if not name.startswith("seg"):
+                continue
+            if hit:
+                pk = prefix_kv[name]
+                blob_cache[name] = {
+                    p: jnp.concatenate([pk[p], seg[p]], axis=2)
+                    for p in ("k", "v")}
+            else:
+                blob_cache[name] = {p: seg[p] for p in ("k", "v")}
+
+        # write the fresh suffix pages back into the pools and publish the
+        # new full prompt pages in the radix tree for later requests (on
+        # pool exhaustion the request simply isn't retained — eviction
+        # already ran — and the blob above is still complete)
+        total_pages = -(-S // ps)
+        fresh_needed = total_pages - len(hit_pages)
+        if fresh_needed > self._kv.free_pages:
+            self.prefix_cache.evict(fresh_needed - self._kv.free_pages)
+        if fresh_needed <= self._kv.free_pages:
+            table = self._kv.alloc(seq.rid, S, shared=hit_pages)
+            src_len = next(iter(
+                c for k, c in cache.items() if k.startswith("seg")
+            ))["k"].shape[2]
+            self._cache = self._get_page_write_fn(fresh_needed, src_len)(
+                self._cache, {k: v for k, v in cache.items()
+                              if k.startswith("seg")},
+                jnp.asarray(table[len(hit_pages):], jnp.int32))
+            self.prefix_cache.insert(token_list[:(S // ps) * ps],
+                                     table[:S // ps])
+            self._kv.free(seq.rid)          # tree refs keep shared pages
+        if hit_pages:
+            self._kv.release(hit_pages)     # unpin
+        jax.block_until_ready(blob_cache)
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        self.steps += 1
+        self.prefill_tokens += Ssuf
+        self.prefix_hit_tokens += hit
+        seq.prefix_hit = hit
+        return first, (blob_cache, S), dt
 
     def kv_blob_bytes(self, kv_blob) -> int:
         cache, _ = kv_blob
@@ -203,16 +407,21 @@ class Engine:
             self._insert_fn[key] = jax.jit(_ins, donate_argnums=(0,))
         return self._insert_fn[key]
 
-    def insert_kv(self, seq: Sequence, kv_blob) -> int:
+    def insert_kv(self, seq: Sequence, kv_blob, shared: List[int] = (),
+                  skip_tokens: int = 0) -> int:
         """Install a transferred prefill cache.
 
-        Paged: allocate the block table for the sequence's residency, then
-        splice the blob's pages into the pools — touches O(prompt pages) of
-        device memory, not the whole cache. Dense fallback: slot write into
-        the slab."""
+        Paged: allocate the block table for the sequence's residency —
+        `shared` pages (pinned via `pin_prefix`) head the table, covering
+        the first `skip_tokens` positions, and the blob (which carries only
+        the suffix KV beyond `skip_tokens`) is spliced into the fresh
+        pages — touches O(suffix pages) of device memory, not the whole
+        cache. Dense fallback: slot write into the slab."""
         cache, n_tok = kv_blob
         if self.paged:
-            return self._insert_kv_paged(seq, cache, n_tok)
+            return self._insert_kv_paged(seq, cache, n_tok, shared,
+                                         skip_tokens)
+        assert not shared and not skip_tokens
         slot = self._slot_free.pop(0)
         seq.slot = slot
 
@@ -241,21 +450,42 @@ class Engine:
             jnp.asarray(n_tok, jnp.int32))
         return slot
 
-    def _insert_kv_paged(self, seq: Sequence, cache, n_tok: int) -> int:
+    def _insert_kv_paged(self, seq: Sequence, cache, n_tok: int,
+                         shared: List[int] = (), skip_tokens: int = 0) -> int:
+        ps = self._kv.page_size
+        assert skip_tokens % ps == 0 and skip_tokens // ps == len(shared)
+        need = self._kv.pages_for(max(self.tokens_needed(seq), n_tok))
+        if need - len(shared) > self._kv.free_pages and self.prefix_caching:
+            self.prefix_cache.evict(need - len(shared) - self._kv.free_pages)
         slot = self._slot_free.pop(0)
         seq.slot = slot
         # same residency formula the admission check approved
-        page_ids = self._kv.alloc(seq.rid, max(self.tokens_needed(seq), n_tok))
-        ps = self._kv.page_size
-        n_splice = min(-(-n_tok // ps), len(page_ids))
-        src_segs = {k: v for k, v in cache.items() if k.startswith("seg")}
-        src_len = next(iter(src_segs.values()))["k"].shape[2]
-        fn = self._get_insert_fn(n_splice, src_len)
-        self._cache = fn(
-            self._cache, src_segs,
-            jnp.asarray(page_ids[:n_splice], jnp.int32),
-            jnp.asarray(self._kv.padded_table(seq.rid), jnp.int32),
-            jnp.asarray(slot, jnp.int32), jnp.asarray(n_tok, jnp.int32))
+        page_ids = self._kv.alloc(seq.rid, max(self.tokens_needed(seq), n_tok),
+                                  shared=shared)
+        n_prompt = min(-(-n_tok // ps), len(page_ids))
+        n_splice = n_prompt - len(shared)
+        splice_ids = page_ids[len(shared):n_prompt]
+        row = jnp.asarray(self._kv.padded_table(seq.rid), jnp.int32)
+        if n_splice > 0:
+            src_segs = {k: v for k, v in cache.items() if k.startswith("seg")}
+            src_len = next(iter(src_segs.values()))["k"].shape[2]
+            fn = self._get_insert_fn(n_splice, src_len)
+            self._cache = fn(
+                self._cache, src_segs,
+                jnp.asarray(splice_ids, jnp.int32),
+                row, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(n_tok, jnp.int32))
+        else:   # fully shared prompt: just point the slot at the table
+            self._cache["block_tables"] = \
+                self._cache["block_tables"].at[slot].set(row)
+            self._cache["pos"] = self._cache["pos"].at[slot].set(
+                jnp.asarray(n_tok, jnp.int32))
+        if self.prefix_caching:
+            # publish the full prompt pages for future shared-prefix hits
+            n_full = n_tok // ps
+            self.prefix_cache.insert(seq.tokens[:n_full * ps],
+                                     page_ids[:n_full])
+            seq.decode_hit = skip_tokens
         return slot
 
     def release(self, seq: Sequence):

@@ -1,0 +1,403 @@
+"""Shared-prefix KV reuse: radix tree semantics, refcounted page sharing,
+token-identical outputs with the cache on vs off, and simulator-vs-live
+prefix-hit routing parity."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.core.latency_model import LatencyModel, Parallelism
+from repro.core.simulator import InstanceConfig, simulate_disaggregated
+from repro.core.workload import (Request, WorkloadSpec, sample_multi_turn,
+                                 sample_requests)
+from repro.models.api import build_model
+from repro.serving.cluster import DisaggCluster
+from repro.serving.kv_cache import KVCacheManager, TRASH_PAGE
+from repro.serving.prefix_cache import RadixPrefixCache
+
+CFG = get_config("yi-6b-smoke")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build_model(CFG).init(jax.random.PRNGKey(0))
+
+
+# ---------------- radix tree ----------------------------------------------
+
+def test_radix_tree_page_granular_match_and_split():
+    t = RadixPrefixCache(page_size=4)
+    a = list(range(100, 112))                   # 3 pages
+    t.insert(a)
+    assert t.peek(a) == 12
+    assert t.peek(a + [1, 2]) == 12             # deeper query, same match
+    assert t.peek(a[:7]) == 4                   # partial page never matches
+    assert t.peek([9] + a[1:]) == 0
+    # diverge after page 1 -> edge splits at the page boundary
+    b = a[:4] + [7, 7, 7, 7, 8, 8, 8, 8]
+    t.insert(b)
+    assert t.peek(b) == 12
+    assert t.peek(a) == 12
+    hit, pages = t.match(a)
+    hit_b, pages_b = t.match(b)
+    assert hit == hit_b == 12
+    assert pages[0] == pages_b[0]               # shared first page
+    assert set(pages[1:]).isdisjoint(pages_b[1:])
+    # re-inserting an existing path adopts nothing
+    assert t.insert(a) == 0
+
+
+def test_radix_tree_lru_eviction_order():
+    t = RadixPrefixCache(page_size=2)
+    t.insert([1, 1])
+    t.insert([2, 2])
+    t.insert([3, 3])
+    t.match([1, 1])                             # 1 is now most recent
+    freed = t.evict(1)
+    assert len(freed) == 1
+    assert t.peek([2, 2]) == 0                  # LRU victim
+    assert t.peek([1, 1]) == 2 and t.peek([3, 3]) == 2
+
+
+def test_tree_eviction_respects_external_refs():
+    kv = KVCacheManager(9, 4, max_len=16)
+    t = RadixPrefixCache(page_size=4, allocator=kv)
+    ta = kv.alloc(0, 8)                         # 2 pages
+    t.insert(list(range(8)), ta)                # tree acquires both
+    assert all(kv.ref(p) == 2 for p in ta)
+    kv.free(0)                                  # only the tree holds them
+    assert all(kv.ref(p) == 1 for p in ta)
+    hit, pages = t.match(list(range(8)))
+    kv.acquire(pages)                           # an active sequence pins it
+    assert t.evict(10) == []                    # nothing evictable
+    kv.release(pages)
+    freed = t.evict(10)
+    assert sorted(freed) == sorted(ta)          # now the subtree goes
+    assert kv.free_pages == 8                   # pages are back in the pool
+
+
+# ---------------- refcounted KVCacheManager -------------------------------
+
+def test_kv_manager_shared_alloc_and_release():
+    kv = KVCacheManager(9, 4, max_len=32)       # 8 usable pages
+    ta = kv.alloc(0, 12)                        # 3 fresh pages
+    assert [kv.ref(p) for p in ta] == [1, 1, 1]
+    tb = kv.alloc(1, 12, shared=ta[:2])         # share 2, 1 fresh
+    assert tb[:2] == ta[:2]
+    assert kv.ref(ta[0]) == 2 and kv.ref(ta[2]) == 1
+    assert kv.used_pages == 4
+    assert kv.can_admit(12, n_shared=2) and not kv.can_admit(32)
+    # releasing A keeps the shared pages alive for B
+    assert kv.free(0) == 1                      # only A's private page freed
+    assert kv.ref(tb[0]) == 1
+    assert kv.free(1) == 3
+    assert kv.free_pages == 8 and kv.used_pages == 0
+
+
+def test_kv_manager_copy_on_write():
+    kv = KVCacheManager(9, 4, max_len=32)
+    ta = kv.alloc(0, 8)
+    tb = kv.alloc(1, 8, shared=[ta[0]])
+    assert kv.cow(0, 1) is None                 # private page: write in place
+    old, new = kv.cow(1, 0)                     # shared page: private copy
+    assert old == ta[0] and new not in ta
+    assert kv.block_table(1)[0] == new
+    assert kv.ref(old) == 1 and kv.ref(new) == 1
+    kv.free(0)
+    kv.free(1)
+    assert kv.free_pages == 8
+
+
+# ---------------- allocator invariants (property test) --------------------
+
+try:        # hypothesis-gated: optional dep (see CHANGES.md PR 1)
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:
+    st = None
+
+
+def _check_invariants_under(ops, ps):
+    """Drive random alloc(+shared prefix)/free/evict/insert interleavings:
+    the free list stays disjoint from every live block table and from the
+    tree, and page counts are conserved."""
+    num_pages = 33
+    kv = KVCacheManager(num_pages, ps, max_len=8 * ps)
+    tree = RadixPrefixCache(ps, allocator=kv)
+    rng = np.random.default_rng(0)
+    live = {}                   # rid -> token prefix list
+    next_rid = 0
+    for kind, n_tok, evict_n in ops:
+        kind = kind % 4
+        n_tok = min(n_tok, 8 * ps - 1)      # engine asserts S < max_len
+        if kind in (0, 1):      # alloc (prefix-matched), maybe insert
+            toks = rng.integers(0, 3, size=n_tok).tolist()
+            hit, pages = tree.match(toks)
+            hit = min(hit, ((n_tok - 1) // ps) * ps)
+            pages = pages[:hit // ps]
+            kv.acquire(pages)       # pin before eviction can run (engine
+                                    # order: match -> pin -> evict -> alloc)
+            if kv.pages_for(n_tok) - len(pages) > kv.free_pages:
+                tree.evict(kv.pages_for(n_tok) - len(pages) - kv.free_pages)
+            if kv.pages_for(n_tok) - len(pages) <= kv.free_pages:
+                table = kv.alloc(next_rid, n_tok, shared=pages)
+                live[next_rid] = toks
+                if kind == 0:
+                    tree.insert(toks[:(n_tok // ps) * ps],
+                                table[:n_tok // ps])
+                next_rid += 1
+            kv.release(pages)       # unpin (block table holds its own ref)
+        elif kind == 2 and live:        # free a random live sequence
+            rid = list(live)[n_tok % len(live)]
+            kv.free(rid)
+            del live[rid]
+        elif kind == 3:
+            tree.evict(evict_n)
+
+        # ---- invariants ------------------------------------------------
+        free = set(kv._free)
+        assert TRASH_PAGE not in free
+        tree_pages = tree.pages_in_tree()
+        assert len(set(tree_pages)) == len(tree_pages)
+        tabled = set()
+        for rid in live:
+            tabled |= set(kv.block_table(rid))
+        assert free.isdisjoint(tabled), "freed page still in a block table"
+        assert free.isdisjoint(tree_pages), "freed page still in the tree"
+        # conservation: every non-trash page is free xor refcounted
+        assert len(free) + len(kv._refcnt) == num_pages - 1
+        assert free.isdisjoint(kv._refcnt)
+        # refcounts bound the observable owners
+        for p, c in kv._refcnt.items():
+            owners = sum(p in set(kv.block_table(r)) for r in live)
+            owners += tree_pages.count(p)
+            assert c >= owners, (p, c, owners)
+    for rid in list(live):
+        kv.free(rid)
+    tree.evict(10 ** 6)
+    assert kv.free_pages == num_pages - 1, "pages leaked"
+
+
+if st is not None:
+    @given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 40),
+                              st.integers(0, 3)),
+                    min_size=1, max_size=60),
+           st.integers(2, 7))
+    @settings(max_examples=60, deadline=None)
+    def test_pages_conserved_under_random_interleavings(ops, ps):
+        _check_invariants_under(ops, ps)
+
+
+def test_pages_conserved_seeded_fuzz():
+    """Deterministic stand-in for the hypothesis property test so the
+    invariants are exercised even without the optional dep."""
+    rng = np.random.default_rng(42)
+    for ps in (2, 3, 5):
+        for _ in range(12):
+            ops = [(int(rng.integers(0, 6)), int(rng.integers(1, 41)),
+                    int(rng.integers(0, 4)))
+                   for _ in range(int(rng.integers(1, 60)))]
+            _check_invariants_under(ops, ps)
+
+
+# ---------------- token equality: cache on == cache off -------------------
+
+def _shared_prefix_trace(n=6, seed=1):
+    rr = np.random.default_rng(seed)
+    sys_p = tuple(rr.integers(1, CFG.vocab_size, 16).tolist())
+    out = []
+    for i in range(n):
+        u = tuple(rr.integers(1, CFG.vocab_size, 5 + i).tolist())
+        out.append(Request(i, i * 0.5, 16 + len(u), 5, tokens=sys_p + u))
+    return out
+
+
+def test_prefix_cache_tokens_match_cache_off(params):
+    """Reuse must be invisible in the output: suffix-only prefill over
+    shared pages + suffix-only transfer must produce token-identical
+    results (extends the paged==dense equality family)."""
+    on = DisaggCluster(CFG, params, n_prefill=2, n_decode=2, max_batch=4,
+                       max_len=64, lm_tokens=48, prefix_cache=True)
+    off = DisaggCluster(CFG, params, n_prefill=2, n_decode=2, max_batch=4,
+                        max_len=64, lm_tokens=48)
+    r_on = on.run(_shared_prefix_trace())
+    r_off = off.run(_shared_prefix_trace())
+    assert set(r_on) == set(r_off)
+    for rid in r_on:
+        assert r_on[rid].tokens == r_off[rid].tokens, rid
+    # the cache actually engaged: hits recorded, compute + bytes saved
+    assert sum(r.prefix_hit for r in r_on.values()) > 0
+    assert sum(r.decode_hit for r in r_on.values()) > 0
+    assert (sum(e.prefill_tokens for e in on.prefill)
+            < sum(e.prefill_tokens for e in off.prefill))
+    assert on.tx.total_bytes < off.tx.total_bytes
+    stats = on.prefix_stats()
+    assert stats["prefill"]["hit_tokens"] > 0
+    assert stats["decode"]["matched_pages"] > 0
+
+
+def test_decode_pool_pressure_reclaims_tree_pages(params):
+    """Prompts with distinct full pages make the decode tree retain one
+    extra page per request; a pool sized for ~3 residents must reclaim
+    LRU subtrees under admission pressure (never deadlock the pull loop)
+    and outputs must stay correct."""
+    def trace(seed=2):
+        rr = np.random.default_rng(seed)
+        sys_p = tuple(rr.integers(1, CFG.vocab_size, 16).tolist())
+        return [Request(i, i * 0.5, 36, 4,
+                        tokens=sys_p
+                        + tuple(rr.integers(1, CFG.vocab_size, 20).tolist()))
+                for i in range(8)]
+    base = DisaggCluster(CFG, params, n_prefill=1, n_decode=1, max_batch=8,
+                         max_len=64, lm_tokens=48)
+    tight = DisaggCluster(CFG, params, n_prefill=1, n_decode=1, max_batch=8,
+                          max_len=64, lm_tokens=48, prefix_cache=True,
+                          decode_num_pages=10)      # 9 usable pages
+    r_base = base.run(trace())
+    r_tight = tight.run(trace())
+    assert len(r_tight) == 8
+    for rid in r_tight:
+        assert r_tight[rid].tokens == r_base[rid].tokens, rid
+    assert tight.decode[0].prefix_cache.stats.evicted_pages > 0
+    # after drain, only tree-retained pages remain allocated
+    assert tight.decode[0]._kv.used_pages == \
+        tight.decode[0].prefix_cache.num_pages()
+
+
+def test_admission_liveness_under_bursty_pins(params):
+    """Bursty mixed-prefix traffic against a tight decode pool: prefix
+    pins taken for later-queued requests must never wedge the head's
+    admission (the cluster's liveness fallback drops pins and falls back
+    to full-blob transfer). Every request must complete."""
+    rr = np.random.default_rng(5)
+    prompts = [tuple(rr.integers(1, CFG.vocab_size, 36).tolist())
+               for _ in range(3)]
+    reqs = [Request(i, i * 0.01, 36, 4, tokens=prompts[i % 3])
+            for i in range(9)]
+    dc = DisaggCluster(CFG, params, n_prefill=2, n_decode=1, max_batch=8,
+                       max_len=64, lm_tokens=48, prefix_cache=True,
+                       decode_num_pages=8)          # 7 usable pages
+    res = dc.run(reqs)
+    assert len(res) == 9
+    assert all(r.finish >= 0 for r in res.values())
+    assert not dc.tx.parked                         # nothing stranded
+
+
+def test_prefix_cache_survives_pool_pressure(params):
+    """A prefill pool too small to retain every prefix must evict LRU
+    subtrees (or fall back to stitching) and still serve correct tokens."""
+    reqs = _shared_prefix_trace(n=8)
+    tight = DisaggCluster(CFG, params, n_prefill=1, n_decode=1, max_batch=4,
+                          max_len=64, lm_tokens=48, prefix_cache=True,
+                          prefill_num_pages=9)     # 8 usable pages
+    loose = DisaggCluster(CFG, params, n_prefill=1, n_decode=1, max_batch=4,
+                          max_len=64, lm_tokens=48)
+    r1 = tight.run(_shared_prefix_trace(n=8))
+    r2 = loose.run(_shared_prefix_trace(n=8))
+    assert len(r1) == len(reqs)
+    for rid in r1:
+        assert r1[rid].tokens == r2[rid].tokens, rid
+
+
+# ---------------- simulator vs live: prefix-hit routing -------------------
+
+def _multi_turn_trace():
+    """3 sessions burst their first turns (load spreads them over the
+    prefill fleet), later turns arrive spaced and must follow their
+    session's cached prefix (affinity routing, hit > 0)."""
+    rr = np.random.default_rng(7)
+    reqs = []
+    hist = []
+    for s in range(3):
+        prompt = tuple(rr.integers(1, CFG.vocab_size, 18 + 4 * s).tolist())
+        hist.append(prompt)
+        reqs.append(Request(len(reqs), 0.0, len(prompt), 4, tokens=prompt))
+    for turn in range(2):
+        for s in range(3):
+            grown = hist[s] + tuple(
+                rr.integers(1, CFG.vocab_size, 7 + 2 * s).tolist())
+            hist[s] = grown
+            reqs.append(Request(len(reqs), 50.0 * (turn + 1) + s,
+                                len(grown), 4, tokens=grown))
+    return reqs
+
+
+def test_sim_and_live_report_same_prefix_hit_routing(params):
+    """The simulator's prefix model and the live engines' radix trees run
+    the same code: every prefill routing decision — instance AND hit
+    length — must agree on a multi-turn trace."""
+    lm = LatencyModel(CFG, hw.V5E)
+    _, extras = simulate_disaggregated(
+        _multi_turn_trace(), lm, InstanceConfig(Parallelism(1, 1), 3),
+        InstanceConfig(Parallelism(1, 1), 1))
+    sim = extras["decisions"]
+
+    dc = DisaggCluster(CFG, params, n_prefill=3, n_decode=1, max_batch=8,
+                       max_len=128, lm_tokens=64, prefix_cache=True)
+    res = dc.run(_multi_turn_trace())
+    live = dc.dispatcher.decisions
+
+    assert len(res) == 9
+    sim_pre = [d for d in sim if d[0] == "prefill"]
+    live_pre = [d for d in live if d[0] == "prefill"]
+    assert sim_pre == live_pre
+    # later turns really followed their prefix to distinct instances
+    affine = [(idx, hit) for _, _, idx, hit in sim_pre[3:] if hit > 0]
+    assert len(affine) == 6
+    assert len({idx for idx, _ in affine}) == 3
+    # decode side (single instance): shipped-suffix hit lengths also agree
+    sim_dec = [d for d in sim if d[0] == "decode"]
+    live_dec = [d for d in live if d[0] == "decode"]
+    assert sorted(sim_dec) == sorted(live_dec)
+    assert extras["prefix"]["hit_tokens"] == \
+        sum(r.prefix_hit for r in res.values())
+
+
+# ---------------- workload generator --------------------------------------
+
+def test_multi_turn_generator_shapes():
+    spec = WorkloadSpec("w", 2.0, 0.5, (4, 64), 1.5, 0.3, (2, 8),
+                        slo_ttft=1.0, slo_tpot=1.0,
+                        sys_len=8, turns=3, share=1.0)
+    reqs = sample_multi_turn(spec, rate=3.0, n=12, seed=0, vocab=100)
+    assert len(reqs) == 12
+    assert all(r.tokens is not None and len(r.tokens) == r.in_len
+               for r in reqs)
+    assert all(reqs[i].arrive <= reqs[i + 1].arrive
+               for i in range(len(reqs) - 1))
+    assert [r.rid for r in reqs] == list(range(12))
+    # share=1.0 -> every session opens with the same system prompt
+    firsts = {r.tokens[:8] for r in reqs}
+    assert len(firsts) == 1
+    # sample_requests delegates when the spec carries prefix fields
+    via = sample_requests(spec, 3.0, 12, seed=0)
+    assert via[0].tokens is not None
+
+
+def test_simulator_models_prefix_savings():
+    """Prefill busy time and wire bytes must drop when the cache is
+    modeled — the signal the placement goodput search consumes."""
+    lm = LatencyModel(get_config("yi-6b"), hw.V5E)
+    spec = dataclasses.replace(
+        WorkloadSpec("w", 5.0, 1.0, (4, 1024), 4.0, 0.5, (4, 64),
+                     slo_ttft=1.0, slo_tpot=1.0),
+        sys_len=256, turns=3, share=0.9)
+    reqs = sample_multi_turn(spec, rate=2.0, n=60, seed=3)
+
+    def go(on):
+        return simulate_disaggregated(
+            [dataclasses.replace(r) for r in reqs], lm,
+            InstanceConfig(Parallelism(1, 1), 1),
+            InstanceConfig(Parallelism(1, 1), 1), prefix_cache=on)
+    _, ex_on = go(True)
+    _, ex_off = go(False)
+    assert all(r.finish >= 0 for r in go(True)[0])
+    hit_rate = ex_on["prefix"]["hit_tokens"] / ex_on["prefix"]["prompt_tokens"]
+    assert hit_rate > 0.4
+    busy_on = ex_on["breakdown"]["prefill_busy_s"]
+    busy_off = ex_off["breakdown"]["prefill_busy_s"]
+    assert busy_on < 0.75 * busy_off
+    assert ex_on["kv_bytes"] < 0.75 * ex_off["kv_bytes"]

@@ -132,7 +132,7 @@ def test_sim_and_live_cluster_make_identical_dispatch_decisions():
     live_pre = [d for d in live_dec if d[0] == "prefill"]
     assert sim_pre == live_pre
     # burst in-lens spread over all instances -> decisions are non-trivial
-    assert len({idx for _, _, idx in sim_pre}) == 3
+    assert len({idx for _, _, idx, _hit in sim_pre}) == 3
     sim_dcd = sorted(d for d in sim_dec if d[0] == "decode")
     live_dcd = sorted(d for d in live_dec if d[0] == "decode")
     assert sim_dcd == live_dcd
