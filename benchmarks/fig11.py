@@ -29,16 +29,19 @@ def run(app: str = "chatbot-small", n_requests: int = 250):
     emit(f"fig11.{app}.vllm_pp", us,
          f"goodput_per_chip={g_pp:.2f};tp={par_pp.tp};pp={par_pp.pp}")
 
-    # DistServe-Low (Alg. 2)
+    # DistServe-Low (Alg. 2) — final_slo=False: the timing compares
+    # *search* cost against vllm_pp, which pays no closing-validation sim
     pl_low, us = timed(algo2_low_affinity, lm, spec, rate=8.0, n_node=2,
-                       m_per_node=8, n_requests=n_requests)
+                       m_per_node=8, n_requests=n_requests,
+                       final_slo=False)
     emit(f"fig11.{app}.dist_low", us,
          f"goodput_per_chip={pl_low.prefill.goodput_per_chip:.2f};"
          f"ptp={pl_low.prefill.par.tp};dtp={pl_low.decode.par.tp}")
 
     # DistServe-High (Alg. 1)
     pl_high, us = timed(algo1_high_affinity, lm, spec, rate=8.0, n_node=2,
-                        m_per_node=8, n_requests=n_requests)
+                        m_per_node=8, n_requests=n_requests,
+                        final_slo=False)
     # joint goodput at the Alg.-1 replication ratio
     n, m = ratio_counts(pl_high.prefill.goodput_per_chip,
                         pl_high.decode.goodput_per_chip,

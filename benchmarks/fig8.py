@@ -35,7 +35,8 @@ def build_systems(app: str, n_node: int = 2, m_per_node: int = 8,
     big = lm.param_bytes() > 0.5 * m_per_node * lm.chip.hbm_bytes
     search = algo1_high_affinity if big else algo2_low_affinity
     pl = search(lm, spec, rate=8.0, n_node=n_node,
-                m_per_node=m_per_node, n_requests=n_requests)
+                m_per_node=m_per_node, n_requests=n_requests,
+                final_slo=False)    # only the config is consumed here
     p_par, d_par = pl.prefill.par, pl.decode.par
     gp = _phase_goodput(lm, p_par, spec, "prefill", target=0.9,
                         n_requests=min(n_requests, 150),

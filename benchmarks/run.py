@@ -13,13 +13,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig4,fig8,fig9,fig11,fig12,"
-                         "table2,roofline,paged_kv,prefix_cache")
+                         "table2,roofline,paged_kv,prefix_cache,serving_api")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (fig1, fig2, fig4, fig8, fig11, fig12, paged_kv,
-                   prefix_cache, roofline, table2)
+                   prefix_cache, roofline, serving_api, table2)
     from .common import emit
 
     n_req = 150 if args.quick else 250
@@ -55,6 +55,9 @@ def main() -> None:
     if not only or "prefix_cache" in only:
         jobs.append(("prefix_cache",
                      lambda: prefix_cache.run(quick=args.quick)))
+    if not only or "serving_api" in only:
+        jobs.append(("serving_api",
+                     lambda: serving_api.run(quick=args.quick)))
     if not only or "roofline" in only:
         jobs.append(("roofline", roofline.run))
 

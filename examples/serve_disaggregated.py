@@ -1,6 +1,9 @@
-"""End-to-end serving driver: DistServe vs colocated on the SAME request
-trace, a shared-prefix multi-turn run through the radix prefix cache, and
-a mid-run decode-instance failure to exercise failover.
+"""End-to-end online serving driver for the request-lifecycle API:
+stream tokens from a live DisaggCluster (`submit` -> iterate -> `cancel`),
+track SLO attainment online with `SLOTracker`, compare against the
+colocated baseline on the same trace, run a shared-prefix multi-turn
+chat through the radix prefix cache, and drill a mid-run decode-instance
+failure.
 
     PYTHONPATH=src python examples/serve_disaggregated.py [--arch yi-6b-smoke]
 """
@@ -10,9 +13,15 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.workload import Request, WorkloadSpec, sample_multi_turn
+from repro.core.goodput import SLOTracker
+from repro.core.workload import (Request, WorkloadSpec, sample_multi_turn,
+                                 with_cancellations)
 from repro.models.api import build_model
+from repro.serving.api import SamplingParams
 from repro.serving.cluster import ColocatedCluster, DisaggCluster
+
+SPEC = WorkloadSpec("demo", 2.2, 0.4, (4, 24), 1.6, 0.3, (3, 8),
+                    slo_ttft=2.0, slo_tpot=0.05)
 
 
 def trace(n=12, rate=30.0, seed=0):
@@ -32,13 +41,53 @@ def chat_trace(cfg, n=8, seed=0):
 
 
 def summarize(name, res):
-    ttfts = sorted(r.ttft for r in res.values())
-    tpots = sorted(r.tpot for r in res.values())
+    served = [r for r in res.values() if r.finish_reason != "cancelled"]
+    if not served:
+        print(f"{name:12s} served=0")
+        return
+    ttfts = sorted(r.ttft for r in served)
+    tpots = sorted(r.tpot for r in served)
     p90 = lambda xs: xs[int(0.9 * (len(xs) - 1))]
-    print(f"{name:12s} served={len(res)}  p50/p90 ttft="
-          f"{ttfts[len(ttfts) // 2] * 1e3:.0f}/{p90(ttfts) * 1e3:.0f} ms  "
+    n_cancel = len(res) - len(served)
+    print(f"{name:12s} served={len(served)}  cancelled={n_cancel}  "
+          f"p50/p90 ttft={ttfts[len(ttfts) // 2] * 1e3:.0f}/"
+          f"{p90(ttfts) * 1e3:.0f} ms  "
           f"p50/p90 tpot={tpots[len(tpots) // 2] * 1e3:.0f}/"
           f"{p90(tpots) * 1e3:.0f} ms")
+
+
+def streaming_quickstart(cfg, params):
+    """The serving-API loop: submit, stream token events, cancel."""
+    tracker = SLOTracker(SPEC)
+    dc = DisaggCluster(cfg, params, n_prefill=2, n_decode=1,
+                       max_batch=4, max_len=96, lm_tokens=64,
+                       tracker=tracker)
+    # stream one request token by token (drives the virtual clock)
+    h = dc.submit(Request(0, 0.0, 16, 8),
+                  sampling=SamplingParams(max_tokens=8))
+    print("streaming req 0:", end=" ", flush=True)
+    for ev in h.tokens():
+        print(f"{ev.token}@{ev.t * 1e3:.0f}ms", end=" ")
+    print(f"-> {h.result().finish_reason}")
+
+    # open-loop burst (rids continue past the streamed request);
+    # abandon one request mid-flight
+    burst = trace(10, seed=1)
+    for r in burst:
+        r.rid += 1
+    handles = [dc.submit(r) for r in burst]
+    victim = handles[4]
+    dc.run_until(victim.state.request.arrive + 0.05)
+    victim.cancel()
+    res = dc.drain()
+    summarize("disagg", res)
+    assert victim.status.name == "CANCELLED"
+    s = tracker.summary()
+    print(f"  online SLO: attain={s['attain']:.2f} "
+          f"(ttft {s['ttft_attain']:.2f} / tpot {s['tpot_attain']:.2f})  "
+          f"finished={s['finished']:.0f} cancelled={s['cancelled']:.0f}  "
+          f"worst itl={s['worst_itl'] * 1e3:.1f} ms")
+    return res
 
 
 def main():
@@ -48,18 +97,20 @@ def main():
     cfg = get_config(args.arch)
     params = build_model(cfg).init(jax.random.PRNGKey(0))
 
-    t = trace()
-    disagg = DisaggCluster(cfg, params, n_prefill=2, n_decode=1,
-                           max_batch=4, max_len=96, lm_tokens=64)
-    summarize("disagg", disagg.run([Request(r.rid, r.arrive, r.in_len,
-                                            r.out_len) for r in t]))
+    # 1. streaming quickstart on the lifecycle API
+    streaming_quickstart(cfg, params)
 
+    # 2. colocated baseline on a fresh copy of the same kind of trace
     colo = ColocatedCluster(cfg, params, n_engines=3, max_batch=4, max_len=96)
-    summarize("colocated", colo.run([Request(r.rid, r.arrive, r.in_len,
-                                             r.out_len) for r in t]))
+    summarize("colocated", colo.run(trace()))
 
-    # shared-prefix multi-turn chat through the radix prefix cache
-    ct = chat_trace(cfg)
+    # 3. shared-prefix multi-turn chat through the radix prefix cache,
+    #    with a fraction of requests abandoned mid-flight (cancellation
+    #    must not leak shared pages or pins)
+    # short abandon delays: virtual service times are milliseconds at
+    # smoke scale, so the cancels must land while requests are in flight
+    ct = with_cancellations(chat_trace(cfg), frac=0.3, seed=5,
+                            mean_wait_s=0.02)
     pc = DisaggCluster(cfg, params, n_prefill=1, n_decode=1, max_batch=4,
                        max_len=128, lm_tokens=96, prefix_cache=True)
     res = pc.run(ct)
@@ -77,7 +128,8 @@ def main():
               f"inserted_pages={s.get('inserted_pages', 0):.0f} "
               f"evictions={s.get('evicted_pages', 0):.0f}")
 
-    # failover drill: kill decode instance 1 at t=0.1s
+    # 4. failover drill: kill decode instance 1 at t=0.1s
+    t = trace()
     ft = DisaggCluster(cfg, params, n_prefill=1, n_decode=2,
                        max_batch=4, max_len=96, lm_tokens=64)
     res = ft.run([Request(r.rid, r.arrive, r.in_len, r.out_len) for r in t],

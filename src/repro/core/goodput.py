@@ -1,9 +1,12 @@
 """Goodput = max request rate served within SLOs at the attainment target,
-per chip provisioned (the paper's objective)."""
+per chip provisioned (the paper's objective) — plus the online
+`SLOTracker` every `ServingBackend` (live cluster or simulator) can feed
+token events into, so attainment is one metrics object whether it comes
+from a goodput binary search or a live streaming run."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from .simulator import SimResult, summarize
 from .workload import WorkloadSpec, sample_requests
@@ -15,6 +18,111 @@ class GoodputResult:
     per_chip: float             # rate / chips
     attain_at_rate: float
     chips: int
+
+
+@dataclasses.dataclass
+class SLOReport:
+    """Attainment snapshot (the unified metrics object: `summarize` embeds
+    it in `SimResult.slo`; live benchmarks print it from the tracker)."""
+    total: int = 0              # requests in the denominator
+    finished: int = 0
+    cancelled: int = 0
+    failed: int = 0
+    ttft_ok: int = 0
+    tpot_ok: int = 0
+    both_ok: int = 0
+    worst_itl: float = 0.0      # max inter-token latency seen anywhere
+
+    @property
+    def ttft_attain(self) -> float:
+        return self.ttft_ok / max(self.total, 1)
+
+    @property
+    def tpot_attain(self) -> float:
+        return self.tpot_ok / max(self.total, 1)
+
+    @property
+    def attain(self) -> float:
+        return self.both_ok / max(self.total, 1)
+
+
+class SLOTracker:
+    """Online per-token SLO attainment (paper §2: TTFT + TPOT per request).
+
+    Backends feed it as tokens stream (`observe_event` on every
+    `TokenEvent`, `observe_finish` when a request goes terminal) — pass
+    one as `tracker=` to any `ServingBackend` — or in bulk from recorded
+    latencies (`observe_result`, the path `simulator.summarize` uses).
+    Cancelled/failed requests are counted but never enter the attainment
+    numerator or denominator (an abandoned request has no SLO to meet).
+    """
+
+    def __init__(self, spec: WorkloadSpec, slo_scale: float = 1.0):
+        self.spec = spec
+        self.slo_ttft = spec.slo_ttft * slo_scale
+        self.slo_tpot = spec.slo_tpot * slo_scale
+        self._ttft: Dict[int, float] = {}       # in-flight: rid -> ttft
+        self._last_t: Dict[int, float] = {}
+        self._itl_sum: Dict[int, float] = {}
+        self._itl_n: Dict[int, int] = {}
+        self._report = SLOReport()
+
+    # -- streaming path (live backends and simulators) -------------------
+    def observe_event(self, state, ev):
+        rid = state.rid
+        if ev.index == 0:
+            self._ttft[rid] = ev.t - state.request.arrive
+        else:
+            itl = ev.t - self._last_t[rid]
+            self._itl_sum[rid] = self._itl_sum.get(rid, 0.0) + itl
+            self._itl_n[rid] = self._itl_n.get(rid, 0) + 1
+            self._report.worst_itl = max(self._report.worst_itl, itl)
+        self._last_t[rid] = ev.t
+
+    def observe_finish(self, state):
+        rid = state.rid
+        ttft = self._ttft.pop(rid, None)
+        n = self._itl_n.pop(rid, 0)
+        tpot = self._itl_sum.pop(rid, 0.0) / n if n else 0.0
+        self._last_t.pop(rid, None)
+        from ..serving.api import RequestStatus
+        if state.status is RequestStatus.CANCELLED:
+            self._report.cancelled += 1
+            return
+        if state.status is RequestStatus.FAILED:
+            self._report.failed += 1
+            return
+        self.observe_result(ttft if ttft is not None else float("inf"), tpot)
+
+    # -- bulk path (summarize over recorded traces) ----------------------
+    def observe_result(self, ttft: float, tpot: float):
+        self._report.total += 1
+        self._report.finished += 1
+        ttft_ok = ttft <= self.slo_ttft
+        tpot_ok = tpot <= self.slo_tpot
+        self._report.ttft_ok += ttft_ok
+        self._report.tpot_ok += tpot_ok
+        self._report.both_ok += ttft_ok and tpot_ok
+
+    # -- reporting -------------------------------------------------------
+    def report(self, total: Optional[int] = None) -> SLOReport:
+        """Snapshot; `total` overrides the denominator (e.g. to count
+        still-unfinished requests against attainment, as `summarize`
+        does for its steady-state window)."""
+        rep = dataclasses.replace(self._report)
+        if total is not None:
+            rep.total = total
+        return rep
+
+    def summary(self) -> Dict[str, float]:
+        rep = self.report()
+        return {"finished": rep.finished, "cancelled": rep.cancelled,
+                "failed": rep.failed,
+                "ttft_attain": round(rep.ttft_attain, 4),
+                "tpot_attain": round(rep.tpot_attain, 4),
+                "attain": round(rep.attain, 4),
+                "worst_itl": rep.worst_itl,
+                "slo_ttft": self.slo_ttft, "slo_tpot": self.slo_tpot}
 
 
 def attainment_at_rate(run_sim: Callable, spec: WorkloadSpec, rate: float,

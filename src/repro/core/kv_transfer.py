@@ -71,6 +71,7 @@ class TransferManager:
                                         # decode compute (all but one layer)
         self.times: List[float] = []
         self.peak_parked_bytes = 0
+        self.cancelled_bytes = 0        # parked bytes dropped by cancel()
         self._link_free_at: Dict[Tuple[int, int], float] = {}
 
     def park(self, rid: int, blob: Any, nbytes: int, now: float, src: int = 0,
@@ -81,6 +82,16 @@ class TransferManager:
 
     def parked_bytes(self) -> int:
         return sum(p.nbytes for p in self.parked.values())
+
+    def cancel(self, rid: int) -> bool:
+        """Unpark a request whose transfer will never be pulled (request
+        cancelled while MIGRATING / PENDING_ADMIT): the prefill-side HBM
+        buffer is released, nothing crosses the wire."""
+        p = self.parked.pop(rid, None)
+        if p is None:
+            return False
+        self.cancelled_bytes += p.nbytes
+        return True
 
     def chunks_for(self, nbytes: int) -> int:
         if nbytes <= 0:

@@ -15,7 +15,7 @@ from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 from . import hw
-from .goodput import GoodputResult, max_goodput
+from .goodput import GoodputResult, SLOReport, attainment_at_rate, max_goodput
 from .latency_model import LatencyModel, Parallelism
 from .simulator import InstanceConfig, simulate_colocated, simulate_disaggregated
 from .workload import WorkloadSpec
@@ -36,6 +36,10 @@ class Placement:
     kv_bandwidth: float
     algo: str
     search_s: float = 0.0
+    # unified metrics snapshot of the chosen fleet at the target rate
+    # (same SLOReport object live benchmarks produce from SLOTracker,
+    # scored from per-token timestamps by the same summarize path)
+    slo: Optional[SLOReport] = None
 
     @property
     def chips(self) -> int:
@@ -43,7 +47,7 @@ class Placement:
                 + self.n_decode * self.decode.par.num_chips)
 
     def summary(self) -> Dict:
-        return {
+        out = {
             "algo": self.algo,
             "prefill": {"tp": self.prefill.par.tp, "pp": self.prefill.par.pp,
                         "count": self.n_prefill,
@@ -54,6 +58,25 @@ class Placement:
             "chips": self.chips,
             "search_s": round(self.search_s, 2),
         }
+        if self.slo is not None:
+            out["attain_at_rate"] = round(self.slo.attain, 4)
+        return out
+
+
+def _fleet_slo(lm: LatencyModel, spec: WorkloadSpec, pre: PhasePlan,
+               dec: PhasePlan, n: int, m: int, rate: float,
+               transfer_bw: float, n_requests: int, seed: int) -> SLOReport:
+    """One closing simulation of the *whole* chosen fleet at the target
+    rate; the report (fed by per-token timestamps through SLOTracker) is
+    attached to the Placement so operators see projected attainment, not
+    just the per-phase goodputs the search optimized."""
+    def run(reqs):
+        return simulate_disaggregated(
+            reqs, lm, InstanceConfig(pre.par, n), InstanceConfig(dec.par, m),
+            transfer_bw=transfer_bw)
+    res = attainment_at_rate(run, spec, rate, n_requests=n_requests,
+                             seed=seed)
+    return res.slo
 
 
 def _fits(lm: LatencyModel, par: Parallelism, chip: hw.Chip,
@@ -87,9 +110,11 @@ def algo1_high_affinity(lm: LatencyModel, spec: WorkloadSpec, *,
                         n_node: int = 4, m_per_node: int = 8,
                         chip: hw.Chip = hw.DEFAULT,
                         target: float = 0.9, n_requests: int = 300,
-                        seed: int = 0) -> Placement:
+                        seed: int = 0, final_slo: bool = True) -> Placement:
     """Paper Alg. 1: independent per-phase config search + replication.
-    High cross-node bandwidth -> KV transfer over the full fabric."""
+    High cross-node bandwidth -> KV transfer over the full fabric.
+    final_slo=False skips the closing fleet-level attainment sim (callers
+    that only need the config, e.g. search-time benchmarks)."""
     t0 = time.time()
     transfer_bw = chip.ici_bw  # high-affinity: fast fabric everywhere
     best: Dict[str, Optional[PhasePlan]] = {"prefill": None, "decode": None}
@@ -115,8 +140,12 @@ def algo1_high_affinity(lm: LatencyModel, spec: WorkloadSpec, *,
             return 1          # infeasible at this SLO; report 1x honestly
         return max(math.ceil(rate / g), 1)
     n, m = _count(pre), _count(dec)
+    search_s = time.time() - t0     # search work only: the closing SLO
+                                    # sim below is validation, not search
+    slo = _fleet_slo(lm, spec, pre, dec, n, m, rate, transfer_bw,
+                     n_requests, seed) if final_slo else None
     return Placement(pre, dec, n, m, transfer_bw, "high-affinity",
-                     time.time() - t0)
+                     search_s, slo=slo)
 
 
 def algo2_low_affinity(lm: LatencyModel, spec: WorkloadSpec, *,
@@ -124,10 +153,10 @@ def algo2_low_affinity(lm: LatencyModel, spec: WorkloadSpec, *,
                        n_node: int = 4, m_per_node: int = 8,
                        chip: hw.Chip = hw.DEFAULT,
                        target: float = 0.9, n_requests: int = 300,
-                       seed: int = 0) -> Placement:
+                       seed: int = 0, final_slo: bool = True) -> Placement:
     """Paper Alg. 2: prefill+decode segments of the same stage share a node;
     KV flows over intra-node fabric only. Searches (inter_op, intra-node
-    split) jointly."""
+    split) jointly. final_slo as in algo1_high_affinity."""
     t0 = time.time()
     transfer_bw = chip.ici_bw * chip.ici_links  # intra-slice fabric
     best: Optional[Tuple[float, PhasePlan, PhasePlan]] = None
@@ -163,8 +192,11 @@ def algo2_low_affinity(lm: LatencyModel, spec: WorkloadSpec, *,
         n = 1                 # infeasible at this SLO; report 1x honestly
     else:
         n = max(math.ceil(rate / (per_chip * pair_chips)), 1)
+    search_s = time.time() - t0
+    slo = _fleet_slo(lm, spec, pre, dec, n, n, rate, transfer_bw,
+                     n_requests, seed) if final_slo else None
     return Placement(pre, dec, n, n, transfer_bw, "low-affinity",
-                     time.time() - t0)
+                     search_s, slo=slo)
 
 
 def ratio_counts(prefill_gp: float, decode_gp: float,

@@ -46,6 +46,16 @@ class FCFSQueue(Generic[T]):
     def __len__(self):
         return len(self.items)
 
+    def remove(self, item: T) -> bool:
+        """Drop a queued item (request cancellation while QUEUED). Returns
+        False when the item already left the queue (e.g. batched)."""
+        for i, it in enumerate(self.items):
+            if it is item:
+                del self.items[i]
+                self._tokens -= self.token_of(item)
+                return True
+        return False
+
     def form_batch(self, budget: int, max_batch: Optional[int] = None,
                    can_take: Optional[Callable[[T], bool]] = None) -> List[T]:
         """Paper §4.3: total new tokens per batch ~ L_m; oversized prompts
@@ -157,6 +167,11 @@ class EventLoop:
         t, _, kind, payload = heapq.heappop(self._q)
         self.now = t
         return t, kind, payload
+
+    def peek_time(self) -> Optional[float]:
+        """Timestamp of the next event, or None when the loop is idle
+        (lets `run_until(t)` stop without consuming future events)."""
+        return self._q[0][0] if self._q else None
 
     def __bool__(self) -> bool:
         return bool(self._q)

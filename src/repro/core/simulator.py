@@ -2,7 +2,14 @@
 
 Iteration-level fidelity, mirroring the runtime in repro/serving — batch
 formation, dispatch, and pull-based admission all come from the shared
-scheduler core in `core.scheduler` (the live cluster runs the same code):
+scheduler core in `core.scheduler` (the live cluster runs the same code),
+and both simulators implement the same `serving.api.ServingBackend`
+protocol as the live clusters (`SimDisaggBackend` / `SimColocatedBackend`:
+`submit` / `step` / `run_until` / `drain` / `cancel`), so one driver can
+swap live engines for the analytical latency model without changing the
+serving code around it.  The classic `simulate_disaggregated` /
+`simulate_colocated` functions remain as submit-all-then-drain shims.
+
   * prefill instances: FCFS queues (`FCFSQueue.form_batch` up to the L_m
     token budget, paper §4.3), PP admission every T/pp with full-T latency
     (M/D/1-consistent), shortest-queue dispatch at arrival.
@@ -14,17 +21,23 @@ scheduler core in `core.scheduler` (the live cluster runs the same code):
   * colocated engine (vLLM-like baseline): prefill-priority iteration-level
     scheduling, decode stalls during prefill iterations (the interference
     the paper measures in Fig. 1/2).
+
+Token ids are not modeled (the latency model has no logits), so simulated
+`TokenEvent`s carry token id -1 and `SamplingParams.stop` cannot trigger;
+`max_tokens` and cancellation are honored exactly as in the live runtime.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from .kv_transfer import TransferManager, kv_bytes
 from .latency_model import LatencyModel, Parallelism
-from .scheduler import (DisaggDispatcher, EventLoop, FCFSQueue, PagePool,
+from .scheduler import (DisaggDispatcher, FCFSQueue, PagePool,
                         least_loaded)
 from .workload import Request, WorkloadSpec
+from ..serving.api import (FINISH_CANCELLED, BackendBase, RequestState,
+                           RequestStatus, percentile)
 from ..serving.prefix_cache import RadixPrefixCache
 
 
@@ -47,52 +60,68 @@ class SimResult:
     kv_transfer_total_s: float = 0.0
     kv_transfer_p95_s: float = 0.0
     breakdown: Optional[Dict[str, float]] = None
+    # real inter-token-latency distribution (pooled over finished
+    # requests' per-token timestamps), available when the backend kept
+    # lifecycle states; 0.0 otherwise
+    p99_itl: float = 0.0
+    max_itl: float = 0.0
+    n_cancelled: int = 0
+    slo: Optional[Any] = None   # goodput.SLOReport — the unified metrics
+                                # object live benchmarks also produce
 
 
-def _percentile(xs: List[float], q: float) -> float:
-    """Linear-interpolated percentile (numpy's default 'linear' method)."""
-    if not xs:
-        return 0.0
-    xs = sorted(xs)
-    if len(xs) == 1:
-        return xs[0]
-    pos = q * (len(xs) - 1)
-    lo = int(pos)
-    hi = min(lo + 1, len(xs) - 1)
-    frac = pos - lo
-    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+# the repo-wide linear-interpolated percentile (kept under the historic
+# name; tests pin its behavior through this import path)
+_percentile = percentile
 
 
 def summarize(reqs: List[Request], spec: WorkloadSpec,
               slo_scale: float = 1.0,
               extra: Optional[Dict] = None,
               warmup_frac: float = 0.25) -> SimResult:
-    """Attainment over the steady-state window (arrivals after warmup)."""
+    """Attainment over the steady-state window (arrivals after warmup).
+
+    SLO scoring goes through `goodput.SLOTracker` — the same object the
+    live backends feed online — so placement search and live benchmarks
+    consume one metrics type.  Cancelled requests are excluded from the
+    latency distributions and the attainment denominator.
+    """
+    from .goodput import SLOTracker      # deferred: goodput imports us
     if reqs:
         t_end = max(r.arrive for r in reqs)
         t_warm = t_end * warmup_frac
         reqs = [r for r in reqs if r.arrive >= t_warm] or reqs
-    done = [r for r in reqs if r.finish >= 0]
+    n_cancelled = sum(r.finish_reason == FINISH_CANCELLED for r in reqs)
+    live = [r for r in reqs if r.finish_reason != FINISH_CANCELLED]
+    done = [r for r in live if r.finish >= 0]
+    tracker = SLOTracker(spec, slo_scale=slo_scale)
+    for r in done:
+        tracker.observe_result(r.ttft, r.tpot)
+    n = max(len(live), 1)
+    slo = tracker.report(total=n)
     ttfts = [r.ttft for r in done]
     tpots = [r.tpot for r in done]
-    ok_ttft = [r for r in done if r.ttft <= spec.slo_ttft * slo_scale]
-    ok_tpot = [r for r in done if r.tpot <= spec.slo_tpot * slo_scale]
-    ok = [r for r in done
-          if r.ttft <= spec.slo_ttft * slo_scale
-          and r.tpot <= spec.slo_tpot * slo_scale]
-    n = max(len(reqs), 1)
     res = SimResult(
         requests=reqs,
-        ttft_attain=len(ok_ttft) / n,
-        tpot_attain=len(ok_tpot) / n,
-        attain=len(ok) / n,
+        ttft_attain=slo.ttft_attain,
+        tpot_attain=slo.tpot_attain,
+        attain=slo.attain,
         p50_ttft=_percentile(ttfts, 0.5), p90_ttft=_percentile(ttfts, 0.9),
         p50_tpot=_percentile(tpots, 0.5), p90_tpot=_percentile(tpots, 0.9),
+        n_cancelled=n_cancelled,
+        slo=slo,
     )
     if extra:
         res.kv_transfer_total_s = extra.get("kv_total", 0.0)
         res.kv_transfer_p95_s = extra.get("kv_p95", 0.0)
         res.breakdown = extra.get("breakdown")
+        states = extra.get("states")
+        if states:
+            keep = {r.rid for r in done}
+            itl = [d for rid, st in states.items() if rid in keep
+                   for d in st.itl()]
+            res.p99_itl = _percentile(itl, 0.99)
+            res.max_itl = max(itl) if itl else 0.0
     return res
 
 
@@ -180,23 +209,39 @@ class _DecodeInstance:
         return float(sum(r.in_len + r.tokens_done for r in self.running))
 
 
-def simulate_disaggregated(
-        reqs: List[Request],
-        lm: LatencyModel,
-        prefill: InstanceConfig,
-        decode: InstanceConfig,
-        *,
-        transfer_bw: float = 50e9,
-        lm_tokens: Optional[int] = None,
-        max_decode_batch: Optional[int] = None,
-        kv_reserve: float = 0.1,
-        page_tokens: int = 16,
-        num_decode_pages: Optional[int] = None,
-        dispatcher: Optional[DisaggDispatcher] = None,
-        phase: str = "both",
-        prefix_cache: Optional[bool] = None,
-        horizon: float = 1e9) -> Tuple[List[Request], Dict]:
-    """Returns (requests with timestamps, extras).
+class _SimBackend(BackendBase):
+    """Plumbing shared by both simulator backends: horizon-guarded
+    stepping, `SamplingParams.max_tokens` caps, and per-request cleanup
+    (token ids are not modeled, so stop tokens cannot trigger here)."""
+
+    def _init_sim(self, horizon: float, record_events: bool, tracker):
+        self._init_backend(tracker=tracker)
+        # bulk goodput sweeps simulate millions of tokens: the closed-world
+        # shims disable per-token TokenEvent recording (a tracker or
+        # on_token callback re-enables it per consumer)
+        self._record_tokens = record_events
+        self.horizon = horizon
+        self._out_cap: Dict[int, int] = {}      # rid -> max_tokens cap
+
+    def step(self) -> bool:
+        nxt = self._ev.peek_time()
+        if nxt is None or nxt > self.horizon:
+            return False
+        return super().step()
+
+    def _forget(self, rid: int):
+        super()._forget(rid)
+        self._out_cap.pop(rid, None)
+
+    def _cap_out(self, state: RequestState):
+        if state.sampling.max_tokens is not None:
+            self._out_cap[state.rid] = \
+                state.sampling.out_len(state.request.out_len)
+
+
+class SimDisaggBackend(_SimBackend):
+    """Discrete-event disaggregated serving behind the ServingBackend
+    protocol (the simulator twin of `serving.cluster.DisaggCluster`).
 
     phase="prefill": requests finish at first token (simu_prefill, Alg. 1);
     phase="decode": prefill is instantaneous (simu_decode, Alg. 1).
@@ -204,51 +249,116 @@ def simulate_disaggregated(
     prefix_cache: model per-instance radix-tree prefix caches — matched
     prefixes skip prefill compute (suffix-only prefill time) and
     prefill->decode transfer ships only the suffix the decode instance is
-    missing. Default (None) auto-enables when the trace carries token ids
-    (see `workload.sample_multi_turn`) and the model has per-token KV. The
-    trees and routing policy are the exact classes the live cluster runs,
-    so both report the same prefix-hit routing decisions on one trace."""
-    lm_tok = lm_tokens or lm.saturation_tokens(prefill.par)
-    cap = (lm.chip.hbm_bytes * decode.par.num_chips * (1 - kv_reserve)
-           - lm.param_bytes())
-    cap = max(cap, lm.chip.hbm_bytes * 0.05 * decode.par.num_chips)
-    max_b = max_decode_batch or 4096
-    # page-granular capacity: one page = page_tokens worth of KV bytes
-    # (SSM archs: one page per constant-size state)
-    per_tok = lm.cfg.kv_bytes_per_token(lm.dtype_bytes)
-    page_bytes = per_tok * page_tokens if per_tok else lm.kv_read_bytes(0)
-    page_bytes = max(page_bytes, 1.0)
-    n_pages = num_decode_pages if num_decode_pages is not None \
-        else max(int(cap // page_bytes), 1)
+    missing. Default (None) auto-enables when submitted requests carry
+    token ids (see `workload.sample_multi_turn`) and the model has
+    per-token KV. The trees and routing policy are the exact classes the
+    live cluster runs, so both report the same prefix-hit routing
+    decisions on one trace.
+    """
 
-    if prefix_cache is None:
-        prefix_cache = (per_tok > 0
-                        and any(r.tokens is not None for r in reqs))
-    prefix_on = bool(prefix_cache) and per_tok > 0
+    def __init__(self, lm: LatencyModel, prefill: InstanceConfig,
+                 decode: InstanceConfig, *,
+                 transfer_bw: float = 50e9,
+                 lm_tokens: Optional[int] = None,
+                 max_decode_batch: Optional[int] = None,
+                 kv_reserve: float = 0.1,
+                 page_tokens: int = 16,
+                 num_decode_pages: Optional[int] = None,
+                 dispatcher: Optional[DisaggDispatcher] = None,
+                 phase: str = "both",
+                 prefix_cache: Optional[bool] = None,
+                 horizon: float = 1e9,
+                 tracker=None,
+                 record_events: bool = True):
+        self._init_sim(horizon, record_events, tracker)
+        self.lm = lm
+        self.phase = phase
+        self.transfer_bw = transfer_bw
+        self.page_tokens = page_tokens
+        lm_tok = lm_tokens or lm.saturation_tokens(prefill.par)
+        cap = (lm.chip.hbm_bytes * decode.par.num_chips * (1 - kv_reserve)
+               - lm.param_bytes())
+        cap = max(cap, lm.chip.hbm_bytes * 0.05 * decode.par.num_chips)
+        max_b = max_decode_batch or 4096
+        # page-granular capacity: one page = page_tokens worth of KV bytes
+        # (SSM archs: one page per constant-size state)
+        per_tok = lm.cfg.kv_bytes_per_token(lm.dtype_bytes)
+        page_bytes = per_tok * page_tokens if per_tok else lm.kv_read_bytes(0)
+        page_bytes = max(page_bytes, 1.0)
+        n_pages = num_decode_pages if num_decode_pages is not None \
+            else max(int(cap // page_bytes), 1)
+        self._per_tok = per_tok
+        self._auto_prefix = prefix_cache is None
+        self.prefix_on = bool(prefix_cache) and per_tok > 0
+        self.P = [_PrefillInstance(i, lm, prefill.par, lm_tok)
+                  for i in range(prefill.count)]
+        self.D = [_DecodeInstance(i, lm, decode.par,
+                                  PagePool(n_pages, page_bytes), max_b)
+                  for i in range(decode.count)]
+        if self.prefix_on:
+            self._grow_trees()
+        self.disp = dispatcher or DisaggDispatcher()
+        self.tx = TransferManager(transfer_bw, page_bytes=int(page_bytes),
+                                  n_layers=lm.cfg.num_layers)
+        self.busy_prefill = 0.0
+        self.busy_decode = 0.0
+        self._breakdown = {"lm_tokens": lm_tok, "max_decode_batch": max_b,
+                           "decode_pages": n_pages}
 
-    P = [_PrefillInstance(i, lm, prefill.par, lm_tok,
-                          RadixPrefixCache(page_tokens) if prefix_on else None)
-         for i in range(prefill.count)]
-    D = [_DecodeInstance(i, lm, decode.par, PagePool(n_pages, page_bytes),
-                         max_b,
-                         RadixPrefixCache(page_tokens) if prefix_on else None)
-         for i in range(decode.count)]
-    disp = dispatcher or DisaggDispatcher()
-    tx = TransferManager(transfer_bw, page_bytes=int(page_bytes),
-                         n_layers=lm.cfg.num_layers)
+    def _grow_trees(self):
+        for inst in (*self.P, *self.D):
+            if inst.tree is None:
+                inst.tree = RadixPrefixCache(self.page_tokens)
 
-    ev = EventLoop()
-    for r in reqs:
-        ev.push(r.arrive, "arrive", r)
+    # -- ServingBackend hooks -------------------------------------------
+    def _do_submit(self, state: RequestState, t: float):
+        r = state.request
+        self._cap_out(state)
+        if (self._auto_prefix and not self.prefix_on
+                and r.tokens is not None and self._per_tok > 0):
+            self.prefix_on = True
+            self._grow_trees()
+        self._ev.push(t, "arrive", state)
 
-    busy_prefill = 0.0
-    busy_decode = 0.0
+    def _handle(self, t: float, kind: str, payload: Any):
+        if kind == "arrive":
+            self._on_arrive(payload, t)
+        elif kind == "prefill_poke":
+            self._try_start_prefill(payload, t)
+        elif kind == "prefill_done":
+            self._on_prefill_done(payload, t)
+        elif kind == "decode_poke":
+            self._try_start_decode(payload, t)
+        elif kind == "transfer_done":
+            self._on_transfer_done(payload, t)
+        elif kind == "decode_iter":
+            self._on_decode_iter(payload, t)
 
-    def try_start_prefill(p: _PrefillInstance, now: float):
+    # -- event handlers --------------------------------------------------
+    def _on_arrive(self, state: RequestState, t: float):
+        if state.done:
+            return
+        r = state.request
+        if self.phase == "decode":
+            r.prefill_start = t
+            r.first_token = t
+            self._emit_token(state, -1, t)
+            self._assign_decode(state, t, src=0)
+            return
+        hits = None
+        if self.prefix_on and r.tokens is not None:
+            hits = [p.tree.peek(r.tokens) for p in self.P]
+        pi = self.disp.pick_prefill(r.rid, [p.queue for p in self.P],
+                                    hits=hits)
+        self.P[pi].queue.push(r)
+        state.where = ("prefill", pi)
+        self._ev.push(t, "prefill_poke", self.P[pi])
+
+    def _try_start_prefill(self, p: _PrefillInstance, now: float):
         while p.can_admit():
             start = max(now, p.next_admit)
             if start > now:
-                ev.push(start, "prefill_poke", p)
+                self._ev.push(start, "prefill_poke", p)
                 return
             batch = p.form_batch()
             # prefix hits: only the uncached suffix runs through prefill
@@ -260,189 +370,302 @@ def simulate_disaggregated(
                 if p.tree is not None and r.tokens is not None:
                     h, _ = p.tree.match(r.tokens)
                     # live engines keep >= 1 suffix token for the logits
-                    h = min(h, ((r.in_len - 1) // page_tokens) * page_tokens)
+                    h = min(h, ((r.in_len - 1) // self.page_tokens)
+                            * self.page_tokens)
                     r.prefix_hit = h
-                    n_full = (r.in_len // page_tokens) * page_tokens
+                    n_full = (r.in_len // self.page_tokens) * self.page_tokens
                     p.tree.insert(r.tokens[:n_full])
                 suffix.append(r.in_len - r.prefix_hit)
-            T = lm.prefill_time(suffix, p.par)
+            T = self.lm.prefill_time(suffix, p.par)
             p.next_admit = now + T / p.par.pp
             p.inflight += 1
             for r in batch:
                 r.prefill_start = now
-            ev.push(now + T, "prefill_done", (p, batch, T))
+                st = self._states[r.rid]
+                st.where = ("prefill_run", p)
+                st.to_status(RequestStatus.PREFILLING)
+            self._ev.push(now + T, "prefill_done", (p, batch, T))
 
-    def assign_decode(r: Request, now: float, src: int):
+    def _on_prefill_done(self, payload, t: float):
+        p, batch, T = payload
+        p.inflight -= 1
+        self.busy_prefill += T
+        for r in batch:
+            state = self._states[r.rid]
+            if state.done:              # cancelled mid-prefill
+                continue
+            r.first_token = t
+            self._emit_token(state, -1, t)
+            if self.phase == "prefill":
+                self._finish_state(state, t)
+                continue
+            self._assign_decode(state, t, src=p.iid)
+        self._try_start_prefill(p, t)
+
+    def _assign_decode(self, state: RequestState, now: float, src: int):
         """Least-loaded decode dispatch + park on the prefill side."""
+        r = state.request
         d_hits = None
-        if prefix_on and r.tokens is not None and phase != "decode":
-            d_hits = [d.tree.peek(r.tokens) for d in D]
-        di = disp.pick_decode(r.rid, [d.load for d in D], hits=d_hits)
+        if self.prefix_on and r.tokens is not None and self.phase != "decode":
+            d_hits = [d.tree.peek(r.tokens) for d in self.D]
+        di = self.disp.pick_decode(r.rid, [d.load for d in self.D],
+                                   hits=d_hits)
         # wire bytes = prompt KV the decode side is missing (decode
         # positions are produced there; a shared prefix already resides
         # there); page reservation below covers the full residency. wire
         # time comes from the latency model so calibrated overrides
         # (benchmarks/table2) take effect.
-        if phase == "decode":
+        if self.phase == "decode":
             nbytes, wire_s = 0.0, 0.0
         else:
             r.decode_hit = d_hits[di] if d_hits else 0
             ship = r.in_len - r.decode_hit
-            nbytes = kv_bytes(lm.cfg, ship, lm.dtype_bytes) if ship else 0.0
-            wire_s = lm.kv_transfer_time(ship, transfer_bw) if ship else 0.0
-        tx.park(r.rid, r, nbytes, now, src=src, wire_s=wire_s)
-        D[di].pending.append(r)
-        ev.push(now, "decode_poke", D[di])
+            nbytes = kv_bytes(self.lm.cfg, ship, self.lm.dtype_bytes) \
+                if ship else 0.0
+            wire_s = self.lm.kv_transfer_time(ship, self.transfer_bw) \
+                if ship else 0.0
+        self.tx.park(r.rid, r, nbytes, now, src=src, wire_s=wire_s)
+        self.D[di].pending.append(r)
+        state.where = ("pending", di)
+        state.to_status(RequestStatus.MIGRATING)
+        self._ev.push(now, "decode_poke", self.D[di])
 
-    def try_admit(d: _DecodeInstance, now: float):
+    def _try_admit(self, d: _DecodeInstance, now: float):
         """Pull-based admission: reserve pages, then pull over the link."""
         while d.pending and d.can_admit(d.pending[0]):
             r = d.pending.pop(0)
+            state = self._states[r.rid]
             d.pool.alloc(r.rid, d.charge_pages(r))
             d.in_transfer += 1
             if d.tree is not None and r.tokens is not None:
                 d.tree.match(r.tokens)      # LRU bump, mirrors insert_kv
-                n_full = (r.in_len // page_tokens) * page_tokens
+                n_full = (r.in_len // self.page_tokens) * self.page_tokens
                 d.tree.insert(r.tokens[:n_full])
-            _, t_done = tx.pull(r.rid, now, dst=d.iid)
-            ev.push(t_done, "transfer_done", (d, r))
+            _, t_done = self.tx.pull(r.rid, now, dst=d.iid)
+            state.where = ("transfer", d.iid)
+            self._ev.push(t_done, "transfer_done", (d, r))
+        # blocked entries: amortized O(1) marking — entries only append at
+        # the tail, so once we hit an already-marked one the rest are too
+        # (goodput sweeps run deliberately overloaded; an O(pending) pass
+        # per decode event would go quadratic there)
+        for r in reversed(d.pending):
+            st = self._states[r.rid]
+            if st.status is RequestStatus.PENDING_ADMIT:
+                break
+            st.to_status(RequestStatus.PENDING_ADMIT)
 
-    def try_start_decode(d: _DecodeInstance, now: float):
-        try_admit(d, now)
+    def _on_transfer_done(self, payload, t: float):
+        d, r = payload
+        state = self._states[r.rid]
+        if state.done:      # cancelled on the wire: pages already freed
+            return
+        r.transfer_done = t
+        r.decode_admit = t
+        d.in_transfer -= 1
+        d.arrived.append(r)
+        state.where = ("arrived", d.iid)
+        self._try_start_decode(d, t)
+
+    def _try_start_decode(self, d: _DecodeInstance, now: float):
+        self._try_admit(d, now)
         if d.busy:
             return
         # transferred requests join the batch at an iteration boundary only
         # (mirrors the live cluster, which admits between decode steps)
+        for r in d.arrived:
+            st = self._states[r.rid]
+            st.where = ("running", d.iid)
+            st.to_status(RequestStatus.DECODING)
         d.running.extend(d.arrived)
         d.arrived.clear()
         if not d.running:
             return
         d.busy = True
         eff_b = max(len(d.running) / d.par.pp, 1.0)
-        tau = lm.decode_time(eff_b, d.ctx_tokens() / d.par.pp,
-                             Parallelism(d.par.tp, 1))
-        ev.push(now + tau, "decode_iter", (d, tau))
+        tau = self.lm.decode_time(eff_b, d.ctx_tokens() / d.par.pp,
+                                  Parallelism(d.par.tp, 1))
+        self._ev.push(now + tau, "decode_iter", (d, tau))
 
-    while ev:
-        t_now, kind, payload = ev.pop()
-        if t_now > horizon:
-            break
-        if kind == "arrive":
-            r = payload
-            if phase == "decode":
-                r.prefill_start = t_now
-                r.first_token = t_now
-                assign_decode(r, t_now, src=0)
-                continue
-            hits = None
-            if prefix_on and r.tokens is not None:
-                hits = [p.tree.peek(r.tokens) for p in P]
-            pi = disp.pick_prefill(r.rid, [p.queue for p in P], hits=hits)
-            P[pi].queue.push(r)
-            ev.push(t_now, "prefill_poke", P[pi])
-        elif kind == "prefill_poke":
-            try_start_prefill(payload, t_now)
-        elif kind == "prefill_done":
-            p, batch, T = payload
-            p.inflight -= 1
-            busy_prefill += T
-            for r in batch:
-                r.first_token = t_now
-                if phase == "prefill":
-                    r.finish = t_now
-                    continue
-                assign_decode(r, t_now, src=p.iid)
-            try_start_prefill(p, t_now)
-        elif kind == "decode_poke":
-            try_start_decode(payload, t_now)
-        elif kind == "transfer_done":
-            d, r = payload
-            r.transfer_done = t_now
-            r.decode_admit = t_now
-            d.in_transfer -= 1
-            d.arrived.append(r)
-            try_start_decode(d, t_now)
-        elif kind == "decode_iter":
-            d, tau = payload
-            busy_decode += tau
-            d.busy = False
+    def _on_decode_iter(self, payload, t: float):
+        d, tau = payload
+        self.busy_decode += tau
+        d.busy = False
+        # hot loop (one pass per simulated decode iteration): when nothing
+        # consumes token events and no max_tokens caps are set, skip every
+        # per-request flag check and state lookup until finish time
+        plain = (not self._recording and not self._ontoken_rids
+                 and not self._out_cap)
+        cap = self._out_cap
+        still = []
+        if plain:
             for r in d.running:
                 r.tokens_done += 1
-            still = []
-            for r in d.running:
                 if r.tokens_done >= r.out_len - 1 or r.out_len <= 1:
-                    r.finish = t_now
+                    self._finish_state(self._states[r.rid], t)
                     d.pool.free(r.rid)
                 else:
                     still.append(r)
-            d.running = still
-            try_start_decode(d, t_now)
+        else:
+            rec = self._recording
+            ontoken = self._ontoken_rids
+            for r in d.running:
+                r.tokens_done += 1
+                out_eff = cap[r.rid] if r.rid in cap else r.out_len
+                if rec or r.rid in ontoken:
+                    self._emit_token(self._states[r.rid], -1, t)
+                if r.tokens_done >= out_eff - 1 or out_eff <= 1:
+                    self._finish_state(self._states[r.rid], t)
+                    d.pool.free(r.rid)
+                else:
+                    still.append(r)
+        d.running = still
+        self._try_start_decode(d, t)
 
-    extras = {
-        "kv_total": tx.total_time,
-        "kv_p95": _percentile(tx.times, 0.95),
-        "kv_chunks": tx.total_chunks,
-        "kv_bytes": tx.total_bytes,
-        "parked_bytes_peak": tx.peak_parked_bytes,
-        "decisions": disp.decisions,
-        "breakdown": {"prefill_busy_s": busy_prefill,
-                      "decode_busy_s": busy_decode,
-                      "lm_tokens": lm_tok, "max_decode_batch": max_b,
-                      "decode_pages": n_pages},
-    }
-    if prefix_on:
-        prompt_tokens = sum(r.in_len for r in reqs)
-        extras["prefix"] = {
-            "hit_tokens": sum(r.prefix_hit for r in reqs),
-            "decode_hit_tokens": sum(r.decode_hit for r in reqs),
-            "prompt_tokens": prompt_tokens,
-            "prefill_trees": [p.tree.stats.as_dict() for p in P],
-            "decode_trees": [d.tree.stats.as_dict() for d in D],
+    # -- cancellation ----------------------------------------------------
+    def _do_cancel(self, state: RequestState, t: float):
+        r = state.request
+        if state.where is None:
+            return
+        stage, loc = state.where
+        if stage == "prefill":              # QUEUED in a prefill FCFS queue
+            self.P[loc].queue.remove(r)
+        elif stage == "prefill_run":        # in-flight prefill batch: the
+            pass                            # done handler drops it
+        elif stage == "pending":            # parked, unassigned pages
+            d = self.D[loc]
+            if r in d.pending:
+                d.pending.remove(r)
+            self.tx.cancel(r.rid)
+            self._ev.push(t, "decode_poke", d)  # head may admit now
+        elif stage == "transfer":           # on the wire: pages reserved
+            d = self.D[loc]
+            d.pool.free(r.rid)
+            d.in_transfer -= 1
+            self._ev.push(t, "decode_poke", d)
+        elif stage == "arrived":
+            d = self.D[loc]
+            if r in d.arrived:
+                d.arrived.remove(r)
+            d.pool.free(r.rid)
+            self._ev.push(t, "decode_poke", d)
+        elif stage == "running":
+            d = self.D[loc]
+            if r in d.running:
+                d.running.remove(r)
+            d.pool.free(r.rid)
+            self._ev.push(t, "decode_poke", d)
+
+    # -- metrics ---------------------------------------------------------
+    def extras(self) -> Dict:
+        reqs = [s.request for s in self._states.values()]
+        extras = {
+            "kv_total": self.tx.total_time,
+            "kv_p95": _percentile(self.tx.times, 0.95),
+            "kv_chunks": self.tx.total_chunks,
+            "kv_bytes": self.tx.total_bytes,
+            "parked_bytes_peak": self.tx.peak_parked_bytes,
+            "decisions": self.disp.decisions,
+            "states": dict(self._states),
+            "breakdown": {"prefill_busy_s": self.busy_prefill,
+                          "decode_busy_s": self.busy_decode,
+                          **self._breakdown},
         }
-    return reqs, extras
+        if self.prefix_on:
+            extras["prefix"] = {
+                "hit_tokens": sum(r.prefix_hit for r in reqs),
+                "decode_hit_tokens": sum(r.decode_hit for r in reqs),
+                "prompt_tokens": sum(r.in_len for r in reqs),
+                "prefill_trees": [p.tree.stats.as_dict() for p in self.P],
+                "decode_trees": [d.tree.stats.as_dict() for d in self.D],
+            }
+        return extras
+
+
+def simulate_disaggregated(
+        reqs: List[Request],
+        lm: LatencyModel,
+        prefill: InstanceConfig,
+        decode: InstanceConfig,
+        **kwargs) -> Tuple[List[Request], Dict]:
+    """Closed-world shim over `SimDisaggBackend`: submit-all-then-drain.
+    Returns (requests with timestamps, extras) — see the backend class
+    for the keyword knobs (transfer_bw, lm_tokens, phase, prefix_cache,
+    num_decode_pages, dispatcher, horizon, tracker, ...).  Per-token
+    event recording defaults OFF here (bulk sweeps); pass
+    record_events=True (or a tracker) for ITL distributions."""
+    kwargs.setdefault("record_events", False)
+    backend = SimDisaggBackend(lm, prefill, decode, **kwargs)
+    for r in reqs:
+        backend.submit(r)
+    backend.drain()
+    return reqs, backend.extras()
 
 
 # ---------------------------------------------------------------------------
 # Colocated (vLLM-like) simulation
 # ---------------------------------------------------------------------------
 
-def simulate_colocated(
-        reqs: List[Request],
-        lm: LatencyModel,
-        inst: InstanceConfig,
-        *,
-        max_batch: Optional[int] = None,
-        max_prefill_tokens: int = 2048,
-        kv_reserve: float = 0.1,
-        horizon: float = 1e9) -> Tuple[List[Request], Dict]:
-    """Continuous batching with prefill-priority (vLLM v0 default)."""
-    max_b = max_batch or 4096
-    cap = (lm.chip.hbm_bytes * inst.par.num_chips * (1 - kv_reserve)
-           - lm.param_bytes())
-    cap = max(cap, lm.chip.hbm_bytes * 0.05 * inst.par.num_chips)
+class _ColoEngine:
+    def __init__(self, iid, max_b: float, cap: float):
+        self.iid = iid
+        self.max_b = max_b
+        self.cap = cap
+        self.waiting: FCFSQueue = FCFSQueue(token_of=lambda r: r.in_len)
+        self.running: List[Request] = []
+        self.kv_used = 0.0
+        self.busy = False
 
-    class Engine:
-        def __init__(self, iid):
-            self.iid = iid
-            self.waiting: FCFSQueue = FCFSQueue(token_of=lambda r: r.in_len)
-            self.running: List[Request] = []
-            self.kv_used = 0.0
-            self.busy = False
+    @property
+    def load(self):
+        return len(self.waiting) + len(self.running)
 
-        @property
-        def load(self):
-            return len(self.waiting) + len(self.running)
 
-        def can_admit(self, r):
-            return (len(self.running) < max_b
-                    and self.kv_used + _req_kv_bytes(lm, r) <= cap)
+class SimColocatedBackend(_SimBackend):
+    """Continuous batching with prefill-priority (vLLM v0 default),
+    behind the ServingBackend protocol."""
 
-    engines = [Engine(i) for i in range(inst.count)]
-    ev = EventLoop()
-    for r in reqs:
-        ev.push(r.arrive, "arrive", r)
+    def __init__(self, lm: LatencyModel, inst: InstanceConfig, *,
+                 max_batch: Optional[int] = None,
+                 max_prefill_tokens: int = 2048,
+                 kv_reserve: float = 0.1,
+                 horizon: float = 1e9,
+                 tracker=None,
+                 record_events: bool = True):
+        self._init_sim(horizon, record_events, tracker)
+        self.lm = lm
+        self.par = inst.par
+        self.max_prefill_tokens = max_prefill_tokens
+        max_b = max_batch or 4096
+        cap = (lm.chip.hbm_bytes * inst.par.num_chips * (1 - kv_reserve)
+               - lm.param_bytes())
+        cap = max(cap, lm.chip.hbm_bytes * 0.05 * inst.par.num_chips)
+        self.engines = [_ColoEngine(i, max_b, cap)
+                        for i in range(inst.count)]
 
-    def step(e: Engine, now: float):
+    # -- ServingBackend hooks -------------------------------------------
+    def _do_submit(self, state: RequestState, t: float):
+        self._cap_out(state)
+        self._ev.push(t, "arrive", state)
+
+    def _handle(self, t: float, kind: str, payload: Any):
+        if kind == "arrive":
+            self._on_arrive(payload, t)
+        elif kind == "prefill_done":
+            self._on_prefill_done(payload, t)
+        elif kind == "decode_iter":
+            self._on_decode_iter(payload, t)
+        elif kind == "poke":
+            self._step_engine(payload, t)
+
+    def _on_arrive(self, state: RequestState, t: float):
+        if state.done:
+            return
+        e = self.engines[least_loaded([x.load for x in self.engines])]
+        e.waiting.push(state.request)
+        state.where = ("queued", e)
+        self._step_engine(e, t)
+
+    def _step_engine(self, e: _ColoEngine, now: float):
         if e.busy:
             return
         # prefill first (vLLM prioritizes waiting prefills), batch formed
@@ -450,59 +673,103 @@ def simulate_colocated(
         taken = [0, 0.0]
 
         def can_take(r):
-            if (len(e.running) + taken[0] < max_b
-                    and e.kv_used + taken[1] + _req_kv_bytes(lm, r) <= cap):
+            if (len(e.running) + taken[0] < e.max_b
+                    and e.kv_used + taken[1]
+                    + _req_kv_bytes(self.lm, r) <= e.cap):
                 taken[0] += 1
-                taken[1] += _req_kv_bytes(lm, r)
+                taken[1] += _req_kv_bytes(self.lm, r)
                 return True
             return False
 
-        batch = e.waiting.form_batch(max_prefill_tokens, can_take=can_take)
+        batch = e.waiting.form_batch(self.max_prefill_tokens,
+                                     can_take=can_take)
         if batch:
             e.kv_used += taken[1]
             e.busy = True
-            T = lm.prefill_time([r.in_len for r in batch], inst.par)
+            T = self.lm.prefill_time([r.in_len for r in batch], self.par)
             for r in batch:
                 r.prefill_start = now
-            ev.push(now + T, "prefill_done", (e, batch))
+                st = self._states[r.rid]
+                st.where = ("prefill_run", e)
+                st.to_status(RequestStatus.PREFILLING)
+            self._ev.push(now + T, "prefill_done", (e, batch))
             return
         if e.running:
             e.busy = True
-            eff_b = max(len(e.running) / inst.par.pp, 1.0)
+            eff_b = max(len(e.running) / self.par.pp, 1.0)
             ctx = sum(r.in_len + r.tokens_done for r in e.running)
-            tau = lm.decode_time(eff_b, ctx / inst.par.pp,
-                                 Parallelism(inst.par.tp, 1))
-            ev.push(now + tau, "decode_iter", (e, tau))
+            tau = self.lm.decode_time(eff_b, ctx / self.par.pp,
+                                      Parallelism(self.par.tp, 1))
+            self._ev.push(now + tau, "decode_iter", (e, tau))
 
-    while ev:
-        t_now, kind, payload = ev.pop()
-        if t_now > horizon:
-            break
-        if kind == "arrive":
-            r = payload
-            e = engines[least_loaded([x.load for x in engines])]
-            e.waiting.push(r)
-            step(e, t_now)
-        elif kind == "prefill_done":
-            e, batch = payload
-            e.busy = False
-            for r in batch:
-                r.first_token = t_now
-                r.decode_admit = t_now
-                e.running.append(r)
-            step(e, t_now)
-        elif kind == "decode_iter":
-            e, tau = payload
-            e.busy = False
-            still = []
-            for r in e.running:
-                r.tokens_done += 1
-                if r.tokens_done >= r.out_len - 1 or r.out_len <= 1:
-                    r.finish = t_now
-                    e.kv_used -= _req_kv_bytes(lm, r)
-                else:
-                    still.append(r)
-            e.running = still
-            step(e, t_now)
+    def _on_prefill_done(self, payload, t: float):
+        e, batch = payload
+        e.busy = False
+        for r in batch:
+            state = self._states[r.rid]
+            if state.done:              # cancelled mid-prefill
+                e.kv_used -= _req_kv_bytes(self.lm, r)
+                continue
+            r.first_token = t
+            r.decode_admit = t
+            self._emit_token(state, -1, t)
+            state.where = ("running", e)
+            state.to_status(RequestStatus.DECODING)
+            e.running.append(r)
+        self._step_engine(e, t)
 
-    return reqs, {"kv_total": 0.0, "kv_p95": 0.0, "breakdown": {}}
+    def _on_decode_iter(self, payload, t: float):
+        e, tau = payload
+        e.busy = False
+        rec = self._recording
+        ontoken = self._ontoken_rids
+        cap = self._out_cap
+        still = []
+        for r in e.running:
+            r.tokens_done += 1
+            out_eff = cap[r.rid] if r.rid in cap else r.out_len
+            if rec or r.rid in ontoken:
+                self._emit_token(self._states[r.rid], -1, t)
+            if r.tokens_done >= out_eff - 1 or out_eff <= 1:
+                self._finish_state(self._states[r.rid], t)
+                e.kv_used -= _req_kv_bytes(self.lm, r)
+            else:
+                still.append(r)
+        e.running = still
+        self._step_engine(e, t)
+
+    # -- cancellation ----------------------------------------------------
+    def _do_cancel(self, state: RequestState, t: float):
+        r = state.request
+        if state.where is None:
+            return
+        stage, e = state.where
+        if stage == "queued":
+            e.waiting.remove(r)
+        elif stage == "prefill_run":
+            pass        # prefill_done releases the KV reservation
+        elif stage == "running":
+            if r in e.running:
+                e.running.remove(r)
+            e.kv_used -= _req_kv_bytes(self.lm, r)
+            self._ev.push(t, "poke", e)
+
+    def extras(self) -> Dict:
+        return {"kv_total": 0.0, "kv_p95": 0.0, "breakdown": {},
+                "states": dict(self._states)}
+
+
+def simulate_colocated(
+        reqs: List[Request],
+        lm: LatencyModel,
+        inst: InstanceConfig,
+        **kwargs) -> Tuple[List[Request], Dict]:
+    """Closed-world shim over `SimColocatedBackend` (see that class).
+    Per-token event recording defaults OFF here, as in
+    `simulate_disaggregated`."""
+    kwargs.setdefault("record_events", False)
+    backend = SimColocatedBackend(lm, inst, **kwargs)
+    for r in reqs:
+        backend.submit(r)
+    backend.drain()
+    return reqs, backend.extras()

@@ -23,12 +23,16 @@ class Request:
     # When set, len(tokens) == in_len and the live cluster feeds these ids
     # to the engines, so simulator and cluster see the same prefixes.
     tokens: Optional[Tuple[int, ...]] = None
+    # trace-driven cancellation: a backend submitting this request also
+    # schedules a cancel event at this virtual time (clamped to >= arrive)
+    cancel_at: Optional[float] = None
     # filled by the simulator / engine
     prefill_start: float = -1.0
     first_token: float = -1.0      # TTFT reference point
     transfer_done: float = -1.0
     decode_admit: float = -1.0
     finish: float = -1.0
+    finish_reason: Optional[str] = None   # length | stop | cancelled | failed
     tokens_done: int = 0
     prefix_hit: int = 0            # prefill-side cached-prefix tokens
     decode_hit: int = 0            # decode-side shared-prefix tokens
@@ -41,6 +45,10 @@ class Request:
     def tpot(self) -> float:
         if self.out_len <= 1:
             return 0.0
+        if 0 < self.tokens_done < self.out_len - 1:
+            # early termination (stop token / cancellation): average over
+            # the decode iterations that actually ran
+            return (self.finish - self.first_token) / self.tokens_done
         return (self.finish - self.first_token) / (self.out_len - 1)
 
 
@@ -188,6 +196,21 @@ def sample_multi_turn(spec: WorkloadSpec, rate: float, n: int, *,
     reqs = reqs[:n] if n else reqs
     for i, r in enumerate(reqs):
         r.rid = i
+    return reqs
+
+
+def with_cancellations(reqs: List[Request], frac: float, *,
+                       seed: int = 0,
+                       mean_wait_s: float = 1.0) -> List[Request]:
+    """Stamp `cancel_at` times onto a fraction of a trace (user abandons:
+    close the tab, hit stop).  The cancel fires an exponential wait after
+    arrival, so cancellations land at every lifecycle stage — queued,
+    mid-prefill, parked in transfer, mid-decode.  Mutates and returns
+    `reqs` (the same list shape every sampler produces)."""
+    rng = np.random.default_rng(seed)
+    for r in reqs:
+        if rng.random() < frac:
+            r.cancel_at = r.arrive + float(rng.exponential(mean_wait_s))
     return reqs
 
 

@@ -1,39 +1,40 @@
 """Live disaggregated cluster (DistServe runtime, Fig. 6) and the colocated
 baseline, on real JAX engines with virtual-clock concurrency emulation.
 
+Both clusters implement the `serving.api.ServingBackend` protocol: arrivals
+are external submissions (`submit` returns a `ServeHandle` with streaming
+token events and `.cancel()`), the event loop advances via `step` /
+`run_until(t)` / `drain()`, and every request walks the
+`RequestStatus` state machine (QUEUED -> PREFILLING -> MIGRATING ->
+PENDING_ADMIT -> DECODING -> FINISHED | CANCELLED | FAILED).  The legacy
+closed-world `run(requests)` is a thin submit-all-then-drain shim kept for
+compatibility (it resets the loop + token rng, so repeated runs replay
+identically).
+
 Controller: FCFS arrival queue -> shortest-queue prefill dispatch ->
 pull-based, page-granular KV migration -> least-loaded decode dispatch.
 All dispatch decisions and batch formation go through the shared scheduler
 core in `core.scheduler` (the same code the discrete-event simulator
 runs), and decode admission is gated on free KV *pages*, not whole slots.
-Fault injection hooks exercise the failover paths in core.fault.
+Cancellation at any stage releases pages, prefix pins, and parked
+transfer bytes without leaking.  Fault injection hooks exercise the
+failover paths in core.fault.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.fault import HeartbeatMonitor, plan_failover
 from ..core.kv_transfer import TransferManager, kv_bytes
-from ..core.scheduler import (DisaggDispatcher, EventLoop, FCFSQueue,
-                              least_loaded)
+from ..core.scheduler import DisaggDispatcher, FCFSQueue, least_loaded
 from ..core.workload import Request
+from .api import (FINISH_FAILED, GREEDY, BackendBase, RequestState,
+                  RequestStatus, ServedResult, sequence_tokens)
 from .engine import Engine, Sequence
 
-
-@dataclasses.dataclass
-class ServedResult:
-    rid: int
-    tokens: List[int]
-    ttft: float
-    tpot: float
-    finish: float
-    prefix_hit: int = 0        # prompt tokens served from the prefill-side
-                               # radix tree (prefill compute skipped)
-    decode_hit: int = 0        # prompt tokens already resident on the
-                               # decode side (transfer bytes skipped)
+__all__ = ["DisaggCluster", "ColocatedCluster", "ServedResult"]
 
 
 def _page_bytes(cfg, page_size: int, dtype_bytes: int = 2) -> Optional[int]:
@@ -54,7 +55,37 @@ def _slice_blob(blob, skip_tokens: int):
     return sliced, n_tok
 
 
-class DisaggCluster:
+class _LiveBackend(BackendBase):
+    """Sequence construction shared by both live clusters (previously
+    copied between the two `run` loops with a hardcoded rng seed)."""
+
+    def _init_live(self, cfg, seed: int, tracker=None):
+        self.cfg = cfg
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._init_backend(tracker=tracker)
+
+    def _reset_loop(self):
+        """Fresh event loop, virtual clocks, and token rng (the legacy
+        `run` contract: every replay of the same trace restarts at t=0
+        and derives identical token streams)."""
+        self._rng = np.random.default_rng(self.seed)
+        self._init_backend(tracker=self.tracker)
+        self._reset_clocks()
+
+    def _reset_clocks(self):
+        raise NotImplementedError
+
+    def _make_sequence(self, state: RequestState) -> Sequence:
+        r, sp = state.request, state.sampling
+        seq = Sequence(r.rid, sequence_tokens(self.cfg, r, self._rng),
+                       sp.out_len(r.out_len),
+                       sampling=None if sp == GREEDY else sp)
+        state.seq = seq
+        return seq
+
+
+class DisaggCluster(_LiveBackend):
     """n_prefill + n_decode live engines; virtual-clock event loop."""
 
     def __init__(self, cfg, params, *, n_prefill: int = 1, n_decode: int = 1,
@@ -64,8 +95,9 @@ class DisaggCluster:
                  decode_num_pages: Optional[int] = None,
                  paged: Optional[bool] = None,
                  prefix_cache: bool = False,
-                 prefill_num_pages: Optional[int] = None):
-        self.cfg = cfg
+                 prefill_num_pages: Optional[int] = None,
+                 seed: int = 0, tracker=None):
+        self._init_live(cfg, seed, tracker=tracker)
         if prefix_cache and prefill_num_pages is None:
             # a prefill engine's default pool (one resident sequence) has
             # no room to retain prefixes; keep a few sequences' worth
@@ -97,6 +129,12 @@ class DisaggCluster:
             self.monitor.register(f"decode{i}")
         self.failed_prefill: set = set()
         self.failed_decode: set = set()
+        self._p_free = [0.0] * n_prefill
+        self._d_free = [0.0] * n_decode
+        self._d_active: List[List[Sequence]] = [[] for _ in range(n_decode)]
+        # (state, skip_tokens, pinned_pages) awaiting decode admission
+        self._d_pending: List[List[Tuple[RequestState, int, List[int]]]] = \
+            [[] for _ in range(n_decode)]
 
     # -- fault injection ------------------------------------------------
     def fail_decode(self, idx: int) -> List[int]:
@@ -114,192 +152,241 @@ class DisaggCluster:
         self.failed_prefill.add(idx)
         return [s.rid for s in self.queues[idx].items]
 
-    # -- main loop --------------------------------------------------------
+    def _reset_clocks(self):
+        self._p_free = [0.0] * len(self.prefill)
+        self._d_free = [0.0] * len(self.decode)
+        self._d_active = [[] for _ in self.decode]
+        self._d_pending = [[] for _ in self.decode]
+
+    def _alive_p(self):
+        return [i for i in range(len(self.prefill))
+                if i not in self.failed_prefill]
+
+    def _alive_d(self):
+        return [i for i in range(len(self.decode))
+                if i not in self.failed_decode]
+
+    def _prefill_hits(self, tokens):
+        if not self.prefix_cache:
+            return None
+        return [self.prefill[i].prefix_peek(tokens)
+                for i in range(len(self.prefill))]
+
+    # -- ServingBackend hooks -------------------------------------------
+    def _do_submit(self, state: RequestState, t: float):
+        self._make_sequence(state)
+        self._ev.push(t, "arrive", state)
+
+    def _handle(self, t: float, kind: str, payload: Any):
+        if kind == "arrive":
+            self._on_arrive(payload, t)
+        elif kind == "poke_prefill":
+            self._poke_prefill(payload, t)
+        elif kind == "dispatch_decode":
+            self._on_dispatch_decode(payload, t)
+        elif kind == "poke_decode":
+            self._poke_decode(payload, t)
+        elif kind == "fail_decode":
+            self._on_fail_decode(payload, t)
+
+    # -- event handlers --------------------------------------------------
+    def _on_arrive(self, state: RequestState, t: float):
+        if state.done:                      # cancelled before arrival
+            return
+        seq = state.seq
+        qi = self.dispatcher.pick_prefill(state.rid, self.queues,
+                                          self._alive_p(),
+                                          hits=self._prefill_hits(seq.tokens))
+        self.queues[qi].push(seq)
+        state.where = ("prefill", qi)
+        self._ev.push(t, "poke_prefill", qi)
+
+    def _poke_prefill(self, i: int, now: float):
+        if i in self.failed_prefill or not self.queues[i].items:
+            return
+        if self._p_free[i] > now:           # busy: come back when free
+            self._ev.push(self._p_free[i], "poke_prefill", i)
+            return
+        batch = self.queues[i].form_batch(self.lm_tokens, max_batch=1)
+        for seq in batch:
+            state = self._states[seq.rid]
+            state.to_status(RequestStatus.PREFILLING)
+            req = state.request
+            first, blob, dt = self.prefill[i].prefill_request(seq)
+            seq.append_token(first)
+            req.first_token = now + dt
+            self._emit_token(state, first, now + dt)
+            if seq.done:
+                self._finish_state(state, now + dt)
+            else:
+                # decode target (and hence shipped bytes) is chosen at
+                # dispatch time, where the decode-side prefix is known
+                self._ev.push(now + dt, "dispatch_decode", (state, blob, i))
+            self._p_free[i] = now + dt
+            self._ev.push(now + dt, "poke_prefill", i)
+
+    def _on_dispatch_decode(self, payload, t: float):
+        state, blob, src = payload
+        if state.done:                      # cancelled mid-prefill: the
+            return                          # blob is dropped, nothing held
+        seq, req = state.seq, state.request
+        alive = self._alive_d()
+        loads = [len(self._d_active[i]) + len(self._d_pending[i])
+                 for i in range(len(self.decode))]
+        n_tok = blob[1]
+        d_hits = None
+        if self.prefix_cache:
+            d_hits = [self.decode[i].prefix_peek(seq.tokens[:n_tok])
+                      for i in range(len(self.decode))]
+        di = self.dispatcher.pick_decode(req.rid, loads, alive, hits=d_hits)
+        # pin the decode-resident prefix and ship only the rest
+        skip, pinned = self.decode[di].pin_prefix(seq.tokens[:n_tok])
+        ship = n_tok - skip
+        nbytes = kv_bytes(self.cfg, ship) if ship else 0
+        self.tx.park(seq.rid, blob, nbytes, t, src=src)
+        self._d_pending[di].append((state, skip, pinned))
+        state.where = ("decode", di)
+        state.to_status(RequestStatus.MIGRATING)
+        self._ev.push(t, "poke_decode", di)
+
+    def _poke_decode(self, i: int, now: float):
+        if i in self.failed_decode:
+            return
+        if self._d_free[i] > now:
+            self._ev.push(self._d_free[i], "poke_decode", i)
+            return
+        d = self.decode[i]
+        pending = self._d_pending[i]
+
+        # pull-based admission against free KV pages (paper §4.3);
+        # shared prefix pages are already resident, so only the
+        # suffix needs fresh pages
+        def admit_ready():
+            while pending and d.can_admit(pending[0][0].seq,
+                                          len(pending[0][2])):
+                state, skip, pinned = pending.pop(0)
+                seq, req = state.seq, state.request
+                blob, t_done = self.tx.pull(seq.rid, now, dst=i)
+                d.insert_kv(seq, _slice_blob(blob, skip), shared=pinned,
+                            skip_tokens=skip)
+                d.unpin(pinned)
+                req.decode_admit = max(now, t_done)
+                state.to_status(RequestStatus.DECODING)
+                self._d_active[i].append(seq)
+
+        admit_ready()
+        if pending and not self._d_active[i]:
+            # liveness fallback: nothing is running (so no future poke
+            # will fire) and the head still can't admit — its eviction
+            # is blocked by pages pinned for *later* pending requests.
+            # Drop every pin (those requests fall back to a full-blob
+            # transfer); with no pins and nothing running, the head's
+            # residency always fits after LRU eviction.
+            for j, (state, _skip, pinned) in enumerate(pending):
+                d.unpin(pinned)
+                pending[j] = (state, 0, [])
+            admit_ready()
+        # amortized marking: entries append at the tail, marked ones
+        # accumulate at the front (see the simulator twin)
+        for state, _skip, _pinned in reversed(pending):
+            if state.status is RequestStatus.PENDING_ADMIT:
+                break
+            state.to_status(RequestStatus.PENDING_ADMIT)
+        d._active = self._d_active[i]
+        if not self._d_active[i]:
+            return
+        batch = self._d_active[i]
+        dt = d.decode_step(batch)
+        done_t = now + dt
+        self._d_free[i] = done_t
+        still = []
+        for seq in batch:
+            state = self._states[seq.rid]
+            self._emit_token(state, seq.tokens[-1], done_t)
+            if seq.done:
+                self._finish_state(state, done_t)
+                d.release(seq)
+            else:
+                still.append(seq)
+        self._d_active[i] = still
+        self._ev.push(done_t, "poke_decode", i)
+
+    def _on_fail_decode(self, idx: int, t: float):
+        lost = self.fail_decode(idx)
+        # failover: re-prefill lost requests (keep generated tokens)
+        for rid in lost:
+            state = self._states[rid]
+            if state.done:
+                continue
+            seq = state.seq
+            self.decode[idx].release(seq)
+            seq.done = False
+            if not self._alive_p():         # nowhere to recover to
+                self._finish_state(state, t, FINISH_FAILED)
+                continue
+            qi = self.dispatcher.pick_prefill(
+                rid, self.queues, self._alive_p(),
+                hits=self._prefill_hits(seq.tokens))
+            self.queues[qi].push(seq)
+            state.where = ("prefill", qi)
+            state.to_status(RequestStatus.QUEUED)
+            self._ev.push(t, "poke_prefill", qi)
+        self._d_active[idx] = []
+        # also re-route ready-but-unpulled requests (drop the dead
+        # instance's prefix pin; the new target re-pins its own)
+        moved = self._d_pending[idx]
+        self._d_pending[idx] = []
+        for state, _skip, pinned in moved:
+            self.decode[idx].unpin(pinned)
+            parked = self.tx.parked.pop(state.rid)
+            self._ev.push(t, "dispatch_decode",
+                          (state, parked.blob, parked.src))
+
+    # -- cancellation ----------------------------------------------------
+    def _do_cancel(self, state: RequestState, t: float):
+        """Release whatever this request holds at its current stage:
+        QUEUED -> leave the FCFS queue; PREFILLING -> the in-flight
+        dispatch event drops the blob; MIGRATING / PENDING_ADMIT ->
+        unpark the transfer + drop the decode-side prefix pins;
+        DECODING -> free the batch slot and every KV page."""
+        seq = state.seq
+        if state.status is RequestStatus.QUEUED and state.where is not None:
+            _, qi = state.where
+            self.queues[qi].remove(seq)
+        elif state.status in (RequestStatus.MIGRATING,
+                              RequestStatus.PENDING_ADMIT):
+            _, di = state.where
+            pending = self._d_pending[di]
+            for j, (st, _skip, pinned) in enumerate(pending):
+                if st is state:
+                    del pending[j]
+                    self.decode[di].cancel(seq, pinned)
+                    break
+            self.tx.cancel(state.rid)
+            self._ev.push(t, "poke_decode", di)  # head may admit now
+        elif state.status is RequestStatus.DECODING:
+            _, di = state.where
+            active = self._d_active[di]
+            for j, s in enumerate(active):
+                if s is seq:
+                    del active[j]
+                    break
+            self.decode[di].cancel(seq)
+            self._ev.push(t, "poke_decode", di)  # freed pages may admit
+
+    # -- legacy closed-world shim ----------------------------------------
     def run(self, requests: List[Request],
             fail_decode_at: Optional[Tuple[float, int]] = None
             ) -> Dict[int, ServedResult]:
-        """Drive all requests to completion on the virtual clock."""
-        rng = np.random.default_rng(0)
-        seqs: Dict[int, Sequence] = {}
+        """Submit-all-then-drain compatibility shim: drive a whole trace
+        to completion on the virtual clock (pre-lifecycle behavior,
+        byte-identical results on no-cancel traces)."""
+        self._reset_loop()
         for r in requests:
-            if r.tokens is not None:    # shared-prefix traces carry ids
-                toks = [int(t) % self.cfg.vocab_size for t in r.tokens]
-            else:
-                toks = rng.integers(1, self.cfg.vocab_size,
-                                    size=r.in_len).tolist()
-            seqs[r.rid] = Sequence(r.rid, toks, r.out_len)
-
-        ev = EventLoop()
-        for r in requests:
-            ev.push(r.arrive, "arrive", r)
+            self.submit(r)
         if fail_decode_at is not None:
-            ev.push(fail_decode_at[0], "fail_decode", fail_decode_at[1])
-
-        # per-engine virtual clocks
-        p_free = [0.0] * len(self.prefill)
-        d_free = [0.0] * len(self.decode)
-        d_active: List[List[Sequence]] = [[] for _ in self.decode]
-        d_pending: List[List[Tuple[Request, Sequence]]] = [[] for _ in self.decode]
-        results: Dict[int, ServedResult] = {}
-
-        def alive_p():
-            return [i for i in range(len(self.prefill))
-                    if i not in self.failed_prefill]
-
-        def alive_d():
-            return [i for i in range(len(self.decode))
-                    if i not in self.failed_decode]
-
-        def _finish(req, seq, t):
-            ttft = req.first_token - req.arrive
-            tpot = ((req.finish - req.first_token) / max(seq.out_len - 1, 1))
-            req.prefix_hit = seq.prefix_hit
-            req.decode_hit = seq.decode_hit
-            results[req.rid] = ServedResult(req.rid, seq.tokens, ttft, tpot,
-                                            req.finish, seq.prefix_hit,
-                                            seq.decode_hit)
-
-        def poke_prefill(i, now):
-            if i in self.failed_prefill or not self.queues[i].items:
-                return
-            if p_free[i] > now:                  # busy: come back when free
-                ev.push(p_free[i], "poke_prefill", i)
-                return
-            batch = self.queues[i].form_batch(self.lm_tokens, max_batch=1)
-            for seq in batch:
-                req = seq._req
-                first, blob, dt = self.prefill[i].prefill_request(seq)
-                seq.tokens.append(first)
-                seq.produced += 1
-                req.first_token = now + dt
-                if seq.produced >= seq.out_len:
-                    seq.done = True
-                    req.finish = now + dt
-                    _finish(req, seq, now + dt)
-                else:
-                    # decode target (and hence shipped bytes) is chosen at
-                    # dispatch time, where the decode-side prefix is known
-                    ev.push(now + dt, "dispatch_decode", (req, seq, blob, i))
-                p_free[i] = now + dt
-                ev.push(now + dt, "poke_prefill", i)
-
-        def poke_decode(i, now):
-            if i in self.failed_decode:
-                return
-            if d_free[i] > now:
-                ev.push(d_free[i], "poke_decode", i)
-                return
-            d = self.decode[i]
-
-            # pull-based admission against free KV pages (paper §4.3);
-            # shared prefix pages are already resident, so only the
-            # suffix needs fresh pages
-            def admit_ready():
-                while d_pending[i] and d.can_admit(d_pending[i][0][1],
-                                                   len(d_pending[i][0][3])):
-                    req, seq, skip, pinned = d_pending[i].pop(0)
-                    (blob, _, _), t_done = self.tx.pull(seq.rid, now, dst=i)
-                    d.insert_kv(seq, _slice_blob(blob, skip), shared=pinned,
-                                skip_tokens=skip)
-                    d.unpin(pinned)
-                    req.decode_admit = max(now, t_done)
-                    d_active[i].append(seq)
-
-            admit_ready()
-            if d_pending[i] and not d_active[i]:
-                # liveness fallback: nothing is running (so no future poke
-                # will fire) and the head still can't admit — its eviction
-                # is blocked by pages pinned for *later* pending requests.
-                # Drop every pin (those requests fall back to a full-blob
-                # transfer); with no pins and nothing running, the head's
-                # residency always fits after LRU eviction.
-                for j, (rq, sq, _skip, pinned) in enumerate(d_pending[i]):
-                    d.unpin(pinned)
-                    d_pending[i][j] = (rq, sq, 0, [])
-                admit_ready()
-            d._active = d_active[i]
-            if not d_active[i]:
-                return
-            dt = d.decode_step(d_active[i])
-            done_t = now + dt
-            d_free[i] = done_t
-            still = []
-            for seq in d_active[i]:
-                if seq.done:
-                    seq._req.finish = done_t
-                    _finish(seq._req, seq, done_t)
-                    d.release(seq)
-                else:
-                    still.append(seq)
-            d_active[i] = still
-            ev.push(done_t, "poke_decode", i)
-
-        def prefill_hits(tokens):
-            if not self.prefix_cache:
-                return None
-            return [self.prefill[i].prefix_peek(tokens)
-                    for i in range(len(self.prefill))]
-
-        while ev:
-            t, kind, payload = ev.pop()
-            if kind == "arrive":
-                r = payload
-                seq = seqs[r.rid]
-                seq._req = r
-                qi = self.dispatcher.pick_prefill(r.rid, self.queues,
-                                                  alive_p(),
-                                                  hits=prefill_hits(seq.tokens))
-                self.queues[qi].push(seq)
-                ev.push(t, "poke_prefill", qi)
-            elif kind == "poke_prefill":
-                poke_prefill(payload, t)
-            elif kind == "dispatch_decode":
-                req, seq, blob, src = payload
-                alive = alive_d()
-                loads = [len(d_active[i]) + len(d_pending[i])
-                         for i in range(len(self.decode))]
-                n_tok = blob[1]
-                d_hits = None
-                if self.prefix_cache:
-                    d_hits = [self.decode[i].prefix_peek(seq.tokens[:n_tok])
-                              for i in range(len(self.decode))]
-                di = self.dispatcher.pick_decode(req.rid, loads, alive,
-                                                 hits=d_hits)
-                # pin the decode-resident prefix and ship only the rest
-                skip, pinned = self.decode[di].pin_prefix(seq.tokens[:n_tok])
-                ship = n_tok - skip
-                nbytes = kv_bytes(self.cfg, ship) if ship else 0
-                self.tx.park(seq.rid, (blob, skip, pinned), nbytes, t,
-                             src=src)
-                d_pending[di].append((req, seq, skip, pinned))
-                ev.push(t, "poke_decode", di)
-            elif kind == "poke_decode":
-                poke_decode(payload, t)
-            elif kind == "fail_decode":
-                idx = payload
-                lost = self.fail_decode(idx)
-                # failover: re-prefill lost requests (keep generated tokens)
-                for rid in lost:
-                    seq = seqs[rid]
-                    self.decode[idx].release(seq)
-                    seq.done = False
-                    qi = self.dispatcher.pick_prefill(
-                        rid, self.queues, alive_p(),
-                        hits=prefill_hits(seq.tokens))
-                    self.queues[qi].push(seq)
-                    ev.push(t, "poke_prefill", qi)
-                d_active[idx] = []
-                # also re-route ready-but-unpulled requests (drop the dead
-                # instance's prefix pin; the new target re-pins its own)
-                moved = d_pending[idx]
-                d_pending[idx] = []
-                for req, seq, _skip, pinned in moved:
-                    self.decode[idx].unpin(pinned)
-                    parked = self.tx.parked.pop(req.rid)
-                    blob = parked.blob[0]
-                    ev.push(t, "dispatch_decode",
-                            (req, seq, blob, parked.src))
-        return results
+            self._ev.push(fail_decode_at[0], "fail_decode", fail_decode_at[1])
+        return self.drain()
 
     # -- prefix-cache stats ----------------------------------------------
     def prefix_stats(self) -> Dict[str, Any]:
@@ -315,96 +402,120 @@ class DisaggCluster:
         return {"prefill": agg(self.prefill), "decode": agg(self.decode)}
 
 
-class ColocatedCluster:
+class ColocatedCluster(_LiveBackend):
     """vLLM-like baseline: each engine runs prefill + decode interleaved
-    with prefill priority (iteration-level batching)."""
+    with prefill priority (iteration-level batching).  Implements the
+    same `ServingBackend` protocol (statuses skip MIGRATING /
+    PENDING_ADMIT — nothing migrates in a colocated engine)."""
 
     def __init__(self, cfg, params, *, n_engines: int = 1, max_batch: int = 8,
                  max_len: int = 256, max_prefill_tokens: int = 512,
                  attn_blocks=(64, 64), page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 paged: Optional[bool] = None):
-        self.cfg = cfg
+                 paged: Optional[bool] = None,
+                 seed: int = 0, tracker=None):
+        self._init_live(cfg, seed, tracker=tracker)
         self.engines = [Engine(cfg, params, max_batch=max_batch,
                                max_len=max_len, attn_blocks=attn_blocks,
                                paged=paged, page_size=page_size,
                                num_pages=num_pages)
                         for _ in range(n_engines)]
         self.max_prefill_tokens = max_prefill_tokens
+        self._waiting = [FCFSQueue(token_of=lambda s: len(s.tokens))
+                         for _ in self.engines]
+        self._active: List[List[Sequence]] = [[] for _ in self.engines]
+        self._free_at = [0.0] * n_engines
 
-    def run(self, requests: List[Request]) -> Dict[int, ServedResult]:
-        rng = np.random.default_rng(0)
-        results: Dict[int, ServedResult] = {}
-        ev = EventLoop()
+    def _reset_clocks(self):
+        self._waiting = [FCFSQueue(token_of=lambda s: len(s.tokens))
+                         for _ in self.engines]
+        self._active = [[] for _ in self.engines]
+        self._free_at = [0.0] * len(self.engines)
 
-        waiting = [FCFSQueue(token_of=lambda s: len(s.tokens))
-                   for _ in self.engines]
-        active: List[List[Sequence]] = [[] for _ in self.engines]
-        free_at = [0.0] * len(self.engines)
+    # -- ServingBackend hooks -------------------------------------------
+    def _do_submit(self, state: RequestState, t: float):
+        self._make_sequence(state)
+        self._ev.push(t, "arrive", state)
 
-        for r in requests:
-            if r.tokens is not None:
-                toks = [int(t) % self.cfg.vocab_size for t in r.tokens]
+    def _handle(self, t: float, kind: str, payload: Any):
+        if kind == "arrive":
+            self._on_arrive(payload, t)
+        elif kind == "poke":
+            self._step_engine(payload, t)
+
+    def _on_arrive(self, state: RequestState, t: float):
+        if state.done:
+            return
+        i = least_loaded([len(self._waiting[j]) + len(self._active[j])
+                          for j in range(len(self.engines))])
+        self._waiting[i].push(state.seq)
+        state.where = ("engine", i)
+        self._ev.push(t, "poke", i)
+
+    def _step_engine(self, i: int, now: float):
+        if self._free_at[i] > now:
+            self._ev.push(self._free_at[i], "poke", i)
+            return
+        e = self.engines[i]
+        # prefill priority; page-aware admission via the shared core
+        batch = self._waiting[i].form_batch(self.max_prefill_tokens,
+                                            max_batch=1, can_take=e.can_admit)
+        if batch:
+            seq = batch[0]
+            state = self._states[seq.rid]
+            state.to_status(RequestStatus.PREFILLING)
+            req = state.request
+            first, blob, dt = e.prefill_request(seq)
+            seq.append_token(first)
+            req.first_token = now + dt
+            self._emit_token(state, first, now + dt)
+            e.insert_kv(seq, blob)
+            if seq.done:
+                e.release(seq)
+                self._finish_state(state, now + dt)
             else:
-                toks = rng.integers(1, self.cfg.vocab_size,
-                                    size=r.in_len).tolist()
-            s = Sequence(r.rid, toks, r.out_len)
-            s._req = r
-            ev.push(r.arrive, "arrive", (r, s))
-
-        def _finish(req, seq, t):
-            req.finish = t
-            ttft = req.first_token - req.arrive
-            tpot = (req.finish - req.first_token) / max(seq.out_len - 1, 1)
-            results[req.rid] = ServedResult(req.rid, seq.tokens, ttft, tpot, t)
-
-        def step(i, now):
-            if free_at[i] > now:
-                ev.push(free_at[i], "poke", i)
-                return
-            e = self.engines[i]
-            # prefill priority; page-aware admission via the shared core
-            batch = waiting[i].form_batch(self.max_prefill_tokens,
-                                          max_batch=1, can_take=e.can_admit)
-            if batch:
-                seq = batch[0]
-                req = seq._req
-                first, blob, dt = e.prefill_request(seq)
-                seq.tokens.append(first)
-                seq.produced += 1
-                req.first_token = now + dt
-                e.insert_kv(seq, blob)
-                if seq.produced >= seq.out_len:
-                    seq.done = True
+                state.to_status(RequestStatus.DECODING)
+                self._active[i].append(seq)
+            self._free_at[i] = now + dt
+            self._ev.push(now + dt, "poke", i)
+            return
+        if self._active[i]:
+            batch2 = self._active[i]
+            dt = e.decode_step(batch2)
+            done_t = now + dt
+            still = []
+            for seq in batch2:
+                state = self._states[seq.rid]
+                self._emit_token(state, seq.tokens[-1], done_t)
+                if seq.done:
                     e.release(seq)
-                    _finish(req, seq, now + dt)
+                    self._finish_state(state, done_t)
                 else:
-                    active[i].append(seq)
-                free_at[i] = now + dt
-                ev.push(now + dt, "poke", i)
-                return
-            if active[i]:
-                dt = e.decode_step(active[i])
-                done_t = now + dt
-                still = []
-                for seq in active[i]:
-                    if seq.done:
-                        e.release(seq)
-                        _finish(seq._req, seq, done_t)
-                    else:
-                        still.append(seq)
-                active[i] = still
-                free_at[i] = done_t
-                ev.push(done_t, "poke", i)
+                    still.append(seq)
+            self._active[i] = still
+            self._free_at[i] = done_t
+            self._ev.push(done_t, "poke", i)
 
-        while ev:
-            t, kind, payload = ev.pop()
-            if kind == "arrive":
-                r, s = payload
-                i = least_loaded([len(waiting[j]) + len(active[j])
-                                  for j in range(len(self.engines))])
-                waiting[i].push(s)
-                ev.push(t, "poke", i)
-            elif kind == "poke":
-                step(payload, t)
-        return results
+    # -- cancellation ----------------------------------------------------
+    def _do_cancel(self, state: RequestState, t: float):
+        seq = state.seq
+        if state.where is None:
+            return
+        _, i = state.where
+        if state.status is RequestStatus.QUEUED:
+            self._waiting[i].remove(seq)
+            return
+        active = self._active[i]
+        for j, s in enumerate(active):
+            if s is seq:
+                del active[j]
+                break
+        self.engines[i].cancel(seq)
+        self._ev.push(t, "poke", i)
+
+    # -- legacy closed-world shim ----------------------------------------
+    def run(self, requests: List[Request]) -> Dict[int, ServedResult]:
+        self._reset_loop()
+        for r in requests:
+            self.submit(r)
+        return self.drain()

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.api import build_model, supports_paged
+from .api import FINISH_LENGTH, FINISH_STOP, SamplingParams
 from .kv_cache import KVCacheManager, TRASH_PAGE
 from .prefix_cache import RadixPrefixCache
 
@@ -44,6 +45,28 @@ class Sequence:
     done: bool = False
     prefix_hit: int = 0         # prefill-side cached-prefix tokens
     decode_hit: int = 0         # decode-side shared-prefix tokens
+    sampling: Optional[SamplingParams] = None
+    finish_reason: str = FINISH_LENGTH
+    _rng: Any = None            # lazy, only for temperature > 0
+
+    def append_token(self, tok: int):
+        """Append one generated token and apply the stop conditions:
+        a SamplingParams.stop id ends generation early (finish_reason
+        "stop"); otherwise the out_len budget ends it ("length")."""
+        self.tokens.append(tok)
+        self.produced += 1
+        sp = self.sampling
+        if sp is not None and sp.stop and tok in sp.stop:
+            self.done = True
+            self.finish_reason = FINISH_STOP
+        elif self.produced >= self.out_len:
+            self.done = True
+
+    def rng(self):
+        if self._rng is None:
+            sp = self.sampling or SamplingParams()
+            self._rng = np.random.default_rng((sp.seed, self.rid))
+        return self._rng
 
 
 class Engine:
@@ -293,7 +316,7 @@ class Engine:
         self.clock += dt
         self.steps += 1
         self.prefill_tokens += S
-        first = int(jnp.argmax(logits[0, 0]))
+        first = self._sample_token(seq, logits[0, 0])
         return first, (cache, S), dt
 
     def _prefill_with_prefix(self, seq: Sequence, toks) -> Tuple[int, Any, float]:
@@ -323,7 +346,7 @@ class Engine:
             fn = self._get_prefill_fn(bucket)
             logits, cache = fn(self.params, jnp.asarray(padded),
                                jnp.asarray(Ssuf - 1, jnp.int32))
-        first = int(jnp.argmax(logits[0, 0]))
+        first = self._sample_token(seq, logits[0, 0])
 
         # the migration blob is stitched host-of-pool: already-gathered
         # prefix KV + the freshly computed suffix (never a second gather
@@ -499,6 +522,28 @@ class Engine:
             self._slot_free.append(seq.slot)
             seq.slot = -1
 
+    def cancel(self, seq: Sequence, pinned: List[int] = ()):
+        """Abort a sequence at any lifecycle stage without leaking: drop
+        any prefix pins taken on its behalf (`pin_prefix` references held
+        while it was parked in transfer) and free its pages/slot if it was
+        resident. Safe to call for sequences that never reached this
+        engine (both paths no-op on nothing-held)."""
+        if pinned:
+            self.unpin(list(pinned))
+        self.release(seq)
+
+    def _sample_token(self, seq: Sequence, logits_row) -> int:
+        """Greedy argmax (default) or temperature softmax sampling with
+        the sequence's per-request rng."""
+        sp = seq.sampling
+        if sp is None or sp.temperature <= 0.0:
+            return int(jnp.argmax(logits_row))
+        x = np.asarray(logits_row, np.float64) / sp.temperature
+        x -= x.max()
+        p = np.exp(x)
+        p /= p.sum()
+        return int(seq.rng().choice(p.shape[0], p=p))
+
     def decode_step(self, seqs: List[Sequence]) -> float:
         """One decode iteration for all active sequences."""
         if not seqs:
@@ -515,10 +560,13 @@ class Engine:
         self.steps += 1
         self.decode_tokens += len(seqs)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        sampled = any(s.sampling is not None and s.sampling.temperature > 0
+                      for s in seqs)
+        rows = np.asarray(logits) if sampled else None
         for s in seqs:
-            tok = int(nxt[s.slot])
-            s.tokens.append(tok)
-            s.produced += 1
-            if s.produced >= s.out_len:
-                s.done = True
+            if s.sampling is not None and s.sampling.temperature > 0:
+                tok = self._sample_token(s, rows[s.slot])
+            else:
+                tok = int(nxt[s.slot])
+            s.append_token(tok)
         return dt

@@ -1,0 +1,349 @@
+"""Request-lifecycle serving API: one backend protocol for live clusters
+and simulators, streaming handles, stop conditions, SLO tracking, and
+leak-free cancellation at every lifecycle stage."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.core.goodput import SLOTracker
+from repro.core.latency_model import LatencyModel, Parallelism
+from repro.core.simulator import (InstanceConfig, SimColocatedBackend,
+                                  SimDisaggBackend, simulate_disaggregated,
+                                  summarize)
+from repro.core.workload import Request, WorkloadSpec, with_cancellations
+from repro.models.api import build_model
+from repro.serving.api import (RequestStatus, SamplingParams, ServedResult,
+                               ServingBackend)
+from repro.serving.cluster import ColocatedCluster, DisaggCluster
+
+CFG = get_config("yi-6b-smoke")
+LM = LatencyModel(CFG, hw.V5E)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def _reqs(n=6):
+    return [Request(i, i * 0.01, 10 + (i % 4) * 3, 5) for i in range(n)]
+
+
+def _assert_no_leaks(dc: DisaggCluster):
+    """Allocator invariants after drain (the checker family from
+    test_prefix_cache): every page is free xor refcounted, only the
+    prefix tree may retain pages, every batch slot is back, nothing is
+    parked in the transfer manager, and free lists never intersect a
+    block table or the tree."""
+    assert not dc.tx.parked, "parked transfers leaked"
+    for e in (*dc.prefill, *dc.decode):
+        assert len(e._slot_free) == e.max_batch, "batch slot leaked"
+        if e._kv is None:
+            continue
+        kv = e._kv
+        free = set(kv._free)
+        assert len(free) + len(kv._refcnt) == kv.num_pages - 1
+        assert free.isdisjoint(kv._refcnt)
+        tree_pages = (e.prefix_cache.pages_in_tree()
+                      if e.prefix_caching else [])
+        assert free.isdisjoint(tree_pages)
+        # all remaining references belong to the tree, not to sequences
+        assert kv.used_pages == len(set(tree_pages)), \
+            (kv.used_pages, len(set(tree_pages)))
+        assert not kv._tables, f"block tables leaked: {kv._tables}"
+
+
+# ---------------- one protocol, two worlds --------------------------------
+
+def test_backends_satisfy_protocol(params):
+    dc = DisaggCluster(CFG, params, n_prefill=1, n_decode=1, max_batch=2,
+                       max_len=64, lm_tokens=48)
+    cc = ColocatedCluster(CFG, params, n_engines=1, max_batch=2, max_len=64)
+    sd = SimDisaggBackend(LM, InstanceConfig(Parallelism(1, 1), 1),
+                          InstanceConfig(Parallelism(1, 1), 1))
+    sc = SimColocatedBackend(LM, InstanceConfig(Parallelism(1, 1), 1))
+    for be in (dc, cc, sd, sc):
+        assert isinstance(be, ServingBackend)
+
+
+def test_same_trace_same_decisions_live_and_sim(params):
+    """The acceptance bar: drive the SAME arrival trace through the live
+    cluster and the simulator via ServingBackend.submit/drain and assert
+    identical dispatch decisions and matching per-request structure
+    (token-event counts; TTFT ordering constraints)."""
+    sim = SimDisaggBackend(LM, InstanceConfig(Parallelism(1, 1), 3),
+                           InstanceConfig(Parallelism(1, 1), 1))
+    live = DisaggCluster(CFG, params, n_prefill=3, n_decode=1, max_batch=8,
+                         max_len=64, lm_tokens=48)
+    in_lens = [10, 22, 13, 17, 9, 20]
+    for be in (sim, live):
+        handles = [be.submit(Request(i, 0.0, in_lens[i], 4))
+                   for i in range(len(in_lens))]
+        res = be.drain()
+        assert len(res) == len(in_lens)
+        for h in handles:
+            assert h.status is RequestStatus.FINISHED
+            # token-count structure: out_len events, first one is TTFT
+            assert len(h.state.events) == 4
+            assert h.state.events[0].t == h.state.request.first_token
+            assert h.state.ttft > 0
+            ts = h.state.token_times
+            assert all(b >= a for a, b in zip(ts, ts[1:]))
+    sim_pre = [d for d in sim.disp.decisions if d[0] == "prefill"]
+    live_pre = [d for d in live.dispatcher.decisions if d[0] == "prefill"]
+    assert sim_pre == live_pre
+    assert len({i for _, _, i, _ in sim_pre}) == 3   # non-trivial spread
+    assert sorted(d for d in sim.disp.decisions if d[0] == "decode") == \
+        sorted(d for d in live.dispatcher.decisions if d[0] == "decode")
+
+
+def test_legacy_run_shim_matches_explicit_submit_drain(params):
+    """`run(requests)` is a thin submit-all-then-drain shim: identical
+    ServedResults (every field, including per-token timestamps) to
+    driving the open-loop API by hand — and repeated `run`s replay
+    identically (fresh loop + token rng)."""
+    dc = DisaggCluster(CFG, params, n_prefill=2, n_decode=1, max_batch=4,
+                       max_len=64, lm_tokens=48)
+    via_run = dc.run(_reqs())
+    dc2 = DisaggCluster(CFG, params, n_prefill=2, n_decode=1, max_batch=4,
+                        max_len=64, lm_tokens=48)
+    for r in _reqs():
+        dc2.submit(r)
+    via_api = dc2.drain()
+    assert set(via_run) == set(via_api)
+    for rid in via_run:
+        assert via_run[rid].tokens == via_api[rid].tokens, rid
+        assert via_run[rid].finish_reason == via_api[rid].finish_reason
+        assert len(via_run[rid].token_times) == \
+            len(via_api[rid].token_times)
+    # replay determinism of the shim itself
+    again = dc.run(_reqs())
+    assert {rid: r.tokens for rid, r in again.items()} == \
+        {rid: r.tokens for rid, r in via_run.items()}
+
+
+def test_streaming_iterator_and_result(params):
+    dc = DisaggCluster(CFG, params, n_prefill=1, n_decode=1, max_batch=4,
+                       max_len=64, lm_tokens=48)
+    seen = []
+    h = dc.submit(Request(0, 0.0, 12, 6),
+                  on_token=lambda st, ev: seen.append(ev.token))
+    streamed = [ev.token for ev in h.tokens()]
+    assert len(streamed) == 6
+    assert streamed == seen                       # callback saw the same
+    res = h.result()
+    assert isinstance(res, ServedResult)
+    assert res.tokens[-6:] == streamed
+    assert res.n_generated == 6
+    assert res.tpot_max >= res.tpot_p99 >= 0.0
+
+
+# ---------------- stop conditions -----------------------------------------
+
+def test_stop_token_ends_generation_with_reason(params):
+    prompt = tuple(np.random.default_rng(3).integers(
+        1, CFG.vocab_size, 12).tolist())
+    dc = DisaggCluster(CFG, params, n_prefill=1, n_decode=1, max_batch=4,
+                       max_len=64, lm_tokens=48)
+    probe = dc.run([Request(0, 0.0, 12, 8, tokens=prompt)])
+    assert probe[0].finish_reason == "length"
+    stop_tok = probe[0].tokens[-4]                # generated mid-stream
+    h = dc.submit(Request(1, 0.0, 12, 8, tokens=prompt),
+                  sampling=SamplingParams(stop=(stop_tok,)))
+    r = h.result()
+    assert r.finish_reason == "stop"
+    assert r.tokens[-1] == stop_tok
+    assert r.n_generated == 5                     # 8-token budget cut short
+    # max_tokens caps below the request's out_len
+    h2 = dc.submit(Request(2, 0.0, 12, 8, tokens=prompt),
+                   sampling=SamplingParams(max_tokens=3))
+    assert h2.result().n_generated == 3
+
+
+def test_temperature_sampling_reproducible(params):
+    prompt = tuple(np.random.default_rng(4).integers(
+        1, CFG.vocab_size, 10).tolist())
+
+    def gen(rid, seed):
+        """Same rid + seed on a fresh cluster must replay exactly (the
+        per-request rng is seeded by (seed, rid))."""
+        dc = DisaggCluster(CFG, params, n_prefill=1, n_decode=1,
+                           max_batch=4, max_len=64, lm_tokens=48)
+        h = dc.submit(Request(rid, 0.0, 10, 6, tokens=prompt),
+                      sampling=SamplingParams(temperature=1.0, seed=seed))
+        out = h.result().tokens[10:]
+        _assert_no_leaks(dc)
+        return out
+
+    assert gen(0, 7) == gen(0, 7)           # deterministic replay
+    streams = {tuple(gen(0, 7)), tuple(gen(0, 8)), tuple(gen(1, 7))}
+    assert len(streams) > 1                 # seed/rid actually matter
+
+
+# ---------------- cancellation safety -------------------------------------
+
+def test_cancel_at_each_live_stage(params):
+    """Walk a request to each observable lifecycle stage (stepping the
+    event loop one event at a time), cancel there, and require: no page /
+    pin / parked-byte leaks, and later requests still complete."""
+    stages = [RequestStatus.QUEUED, RequestStatus.MIGRATING,
+              RequestStatus.PENDING_ADMIT, RequestStatus.DECODING]
+    for stage in stages:
+        dc = DisaggCluster(CFG, params, n_prefill=1, n_decode=1, max_batch=2,
+                           max_len=64, lm_tokens=48,
+                           decode_num_pages=2 * (64 // 16) + 1)
+        # enough load that admission actually backs up (PENDING_ADMIT)
+        handles = [dc.submit(r) for r in _reqs(5)]
+        target = handles[3]
+        reached = False
+        while not target.done:
+            if target.status is stage:
+                reached = True
+                target.cancel()
+                break
+            if not dc.step():
+                break
+        assert reached, f"stage {stage} never observed"
+        res = dc.drain()
+        assert target.status is RequestStatus.CANCELLED
+        assert res[3].finish_reason == "cancelled"
+        others = [h for h in handles if h is not target]
+        assert all(h.status is RequestStatus.FINISHED for h in others)
+        assert all(len(h.state.events) == 5 for h in others)
+        _assert_no_leaks(dc)
+
+
+def test_cancel_fuzz_random_stages_no_leaks(params):
+    """Property-style fuzz: random cancel times across a bursty trace
+    (hitting queued / parked-in-transfer / pinned-pending / mid-decode at
+    random), with the prefix cache ON so pins and shared pages are in
+    play. Allocator invariants must hold after every drain."""
+    rng = np.random.default_rng(0)
+    sys_p = tuple(rng.integers(1, CFG.vocab_size, 16).tolist())
+    for trial in range(4):
+        rr = np.random.default_rng(100 + trial)
+        reqs = []
+        for i in range(10):
+            u = tuple(rr.integers(1, CFG.vocab_size,
+                                  int(rr.integers(4, 20))).tolist())
+            reqs.append(Request(i, i * 0.02, 16 + len(u), 4,
+                                tokens=sys_p + u))
+        reqs = with_cancellations(reqs, frac=0.5, seed=trial,
+                                  mean_wait_s=0.3)
+        dc = DisaggCluster(CFG, params, n_prefill=2, n_decode=1,
+                           max_batch=4, max_len=64, lm_tokens=48,
+                           prefix_cache=True,
+                           decode_num_pages=3 * (64 // 16) + 1)
+        res = dc.run(reqs)
+        assert len(res) == 10
+        cancelled = {rid for rid, r in res.items()
+                     if r.finish_reason == "cancelled"}
+        for rid, r in res.items():
+            if rid not in cancelled:
+                assert r.finish_reason in ("length", "stop")
+                assert len(r.token_times) == 4
+        _assert_no_leaks(dc)
+        # the cluster stays serviceable: fresh traffic completes
+        post = [Request(100 + i, 0.0, 12, 3) for i in range(3)]
+        for r in post:
+            dc.submit(r, t=dc.now)
+        res2 = dc.drain()
+        assert all(res2[100 + i].finish_reason == "length"
+                   for i in range(3))
+        _assert_no_leaks(dc)
+
+
+def test_cancel_in_colocated_cluster(params):
+    cc = ColocatedCluster(CFG, params, n_engines=1, max_batch=2, max_len=64)
+    handles = [cc.submit(r) for r in _reqs(4)]
+    handles[2].cancel(t=0.0)                      # cancel while queued
+    h_dec = handles[0]
+    while not h_dec.done and h_dec.status is not RequestStatus.DECODING:
+        cc.step()
+    h_dec.cancel()
+    res = cc.drain()
+    assert res[2].finish_reason == "cancelled"
+    assert res[0].finish_reason == "cancelled"
+    assert res[1].finish_reason == "length"
+    for e in cc.engines:
+        assert len(e._slot_free) == e.max_batch
+        if e._kv is not None:
+            assert e._kv.used_pages == 0 and not e._kv._tables
+
+
+def test_cancel_in_simulator_frees_pool_pages():
+    """Simulated cancellation at random stages: PagePool conservation +
+    later requests finish; cancelled requests never count as served."""
+    spec = WorkloadSpec("w", 5.0, 1.0, (4, 512), 4.0, 0.5, (4, 64),
+                        slo_ttft=10.0, slo_tpot=10.0)
+    rng = np.random.default_rng(1)
+    reqs = [Request(i, float(i) * 0.05, int(rng.integers(16, 400)),
+                    int(rng.integers(4, 40))) for i in range(60)]
+    # virtual service times are milliseconds at this scale: keep the
+    # abandon delay short enough to land mid-flight
+    reqs = with_cancellations(reqs, frac=0.4, seed=2, mean_wait_s=0.01)
+    sim = SimDisaggBackend(LM, InstanceConfig(Parallelism(1, 1), 1),
+                           InstanceConfig(Parallelism(1, 1), 1))
+    for r in reqs:
+        sim.submit(r)
+    sim.drain()
+    n_cancelled = sum(r.finish_reason == "cancelled" for r in reqs)
+    assert n_cancelled > 0
+    for d in sim.D:
+        assert d.pool.used == 0, "simulated pages leaked"
+        assert not d.pool._alloc
+        assert not d.running and not d.pending and not d.arrived
+        assert d.in_transfer == 0
+    assert not sim.tx.parked
+    for r in reqs:
+        if r.finish_reason != "cancelled":
+            assert r.finish >= 0 and r.finish_reason == "length"
+    res = summarize(reqs, spec, warmup_frac=0.0)
+    assert res.n_cancelled == n_cancelled
+    assert len(res.requests) == 60
+
+
+# ---------------- online SLO tracking --------------------------------------
+
+def test_slo_tracker_online_matches_summarize():
+    """Feeding the tracker token-by-token while the simulator runs must
+    agree with the offline summarize() pass over the same trace."""
+    spec = WorkloadSpec("w", 4.0, 0.8, (4, 256), 3.0, 0.5, (4, 32),
+                        slo_ttft=0.5, slo_tpot=0.05)
+    rng = np.random.default_rng(3)
+    reqs = [Request(i, float(i) * 0.1, int(rng.integers(16, 200)),
+                    int(rng.integers(4, 24))) for i in range(40)]
+    tracker = SLOTracker(spec)
+    sim = SimDisaggBackend(LM, InstanceConfig(Parallelism(1, 1), 1),
+                           InstanceConfig(Parallelism(1, 1), 1),
+                           tracker=tracker)
+    for r in reqs:
+        sim.submit(r)
+    sim.drain()
+    res = summarize(reqs, spec, extra=sim.extras(), warmup_frac=0.0)
+    rep = tracker.report()
+    assert rep.finished == len(reqs)
+    assert rep.ttft_attain == pytest.approx(res.ttft_attain)
+    assert rep.tpot_attain == pytest.approx(res.tpot_attain)
+    assert rep.attain == pytest.approx(res.attain)
+    assert rep.worst_itl >= res.max_itl > 0
+    assert res.p99_itl > 0
+    assert res.slo is not None and res.slo.attain == res.attain
+
+
+def test_served_result_itl_distribution(params):
+    """TPOT is a distribution now: per-token timestamps expose the tail
+    (max/p99), not just the mean the legacy field carried."""
+    dc = DisaggCluster(CFG, params, n_prefill=1, n_decode=1, max_batch=4,
+                       max_len=64, lm_tokens=48)
+    res = dc.run(_reqs(4))
+    for r in res.values():
+        assert len(r.token_times) == 5
+        itl = r.itl()
+        assert len(itl) == 4
+        assert r.tpot == pytest.approx(sum(itl) / len(itl))
+        assert r.tpot_max == max(itl)
