@@ -1,0 +1,59 @@
+"""Schema check for BENCH_<pr>.json perf-trajectory snapshots.
+
+Usage: python -m benchmarks.check_bench BENCH_*.json
+
+Validates every file against the schema `benchmarks.run.bench_snapshot`
+writes: top-level keys, a known schema version, and non-empty headline
+sections with numeric `us_per_call` rows — so re-anchors can trust the
+trajectory files enough to diff them across PRs.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from .run import BENCH_SCHEMA, HEADLINE
+
+REQUIRED_TOP = ("schema", "pr", "quick", "headline")
+
+
+def check(path: str) -> list:
+    errs = []
+    try:
+        data = json.load(open(path))
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    for k in REQUIRED_TOP:
+        if k not in data:
+            errs.append(f"{path}: missing top-level key '{k}'")
+    if errs:
+        return errs
+    if data["schema"] != BENCH_SCHEMA:
+        errs.append(f"{path}: schema {data['schema']} != {BENCH_SCHEMA}")
+    if not isinstance(data["pr"], int) or data["pr"] < 1:
+        errs.append(f"{path}: bad pr number {data['pr']!r}")
+    for sect in HEADLINE:
+        rows = data["headline"].get(sect)
+        if not rows:
+            errs.append(f"{path}: headline section '{sect}' empty/missing")
+            continue
+        for name, row in rows.items():
+            if not isinstance(row.get("us_per_call"), (int, float)):
+                errs.append(f"{path}: {name} lacks numeric us_per_call")
+    return errs
+
+
+def main(paths) -> int:
+    if not paths:
+        print("usage: python -m benchmarks.check_bench BENCH_*.json")
+        return 2
+    errs = [e for p in paths for e in check(p)]
+    for e in errs:
+        print(e)
+    if not errs:
+        print(f"{len(paths)} bench snapshot(s) ok")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

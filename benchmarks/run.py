@@ -2,11 +2,46 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (see each module for what the
 derived field packs). ``--quick`` trims sweeps for CI-ish runs.
+
+Every run also snapshots the headline numbers (roofline + paged_kv +
+prefix_cache + serving_api rows) into ``BENCH_<pr>.json`` so re-anchors
+can diff speed trends across PRs; ``--bench-out`` overrides the path.
 """
 import argparse
+import json
 import sys
 import time
 import traceback
+
+BENCH_SCHEMA = 1
+PR = 6
+HEADLINE = ("roofline", "paged_kv", "prefix_cache", "serving_api")
+
+
+def _parse_derived(derived: str):
+    out = {}
+    for kv in derived.split(";"):
+        if "=" not in kv:
+            continue
+        k, v = kv.split("=", 1)
+        try:
+            out[k] = float(v.rstrip("x"))
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def bench_snapshot(rows, quick: bool):
+    """Fold the emitted CSV rows into the BENCH_<pr>.json schema."""
+    data = {"schema": BENCH_SCHEMA, "pr": PR, "quick": quick,
+            "headline": {k: {} for k in HEADLINE}}
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        sect = name.split(".")[0]
+        if sect in data["headline"]:
+            data["headline"][sect][name] = {
+                "us_per_call": float(us), **_parse_derived(derived)}
+    return data
 
 
 def main() -> None:
@@ -15,6 +50,7 @@ def main() -> None:
                     help="comma list: fig1,fig2,fig4,fig8,fig9,fig11,fig12,"
                          "table2,roofline,paged_kv,prefix_cache,serving_api")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--bench-out", default=f"BENCH_{PR}.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -74,6 +110,11 @@ def main() -> None:
             emit(f"{name}.done", (time.time() - t0) * 1e6, "FAILED")
     emit("benchmarks.total", (time.time() - t_all) * 1e6,
          f"jobs={len(jobs)};failures={failures}")
+    from .common import ROWS
+    with open(args.bench_out, "w") as f:
+        json.dump(bench_snapshot(ROWS, args.quick), f, indent=1)
+        f.write("\n")
+    print(f"wrote {args.bench_out}", flush=True)
     sys.exit(1 if failures else 0)
 
 

@@ -38,6 +38,27 @@ def kv_bytes(cfg, prompt_len: int, dtype_bytes: int = 2) -> int:
     return b
 
 
+def layered_times(start: float, wire_s: float,
+                  n_layers: int) -> Tuple[float, float]:
+    """Per-layer streaming schedule of one KV transfer: layers cross the
+    wire back-to-back, so layer 1 lands at start + wire/L and the last at
+    start + wire. Decode may start attending at first-layer-landed; only
+    wire/L of the transfer is exposed when per-layer compute covers the
+    rest."""
+    L = max(n_layers, 1)
+    return start + wire_s / L, start + wire_s
+
+
+def pipelined_finish(iter_start: float, step_s: float, kv_full_at: float,
+                     n_layers: int) -> float:
+    """Finish time of a decode iteration whose member KV is still landing
+    layer-by-layer: layer i's compute can only run after layer i's pages
+    arrive, so the iteration drains at the later of plain compute and the
+    last layer's arrival plus that layer's compute slice."""
+    L = max(n_layers, 1)
+    return max(iter_start + step_s, kv_full_at + step_s / L)
+
+
 @dataclasses.dataclass
 class ParkedKV:
     rid: int
@@ -83,15 +104,17 @@ class TransferManager:
     def parked_bytes(self) -> int:
         return sum(p.nbytes for p in self.parked.values())
 
-    def cancel(self, rid: int) -> bool:
+    def cancel(self, rid: int) -> Optional[ParkedKV]:
         """Unpark a request whose transfer will never be pulled (request
         cancelled while MIGRATING / PENDING_ADMIT): the prefill-side HBM
-        buffer is released, nothing crosses the wire."""
+        buffer is released, nothing crosses the wire. Returns the popped
+        entry (truthy) so callers can release blob-held resources, or
+        None if nothing was parked."""
         p = self.parked.pop(rid, None)
         if p is None:
-            return False
+            return None
         self.cancelled_bytes += p.nbytes
-        return True
+        return p
 
     def chunks_for(self, nbytes: int) -> int:
         if nbytes <= 0:
@@ -103,6 +126,16 @@ class TransferManager:
     def pull(self, rid: int, now: float, dst: int = 0) -> Tuple[Any, float]:
         """Decode side pulls; returns (blob, completion_time). The wire is
         occupied per (src, dst) link; other links proceed in parallel."""
+        blob, _, t_full = self.pull_layered(rid, now, dst)
+        return blob, t_full
+
+    def pull_layered(self, rid: int, now: float,
+                     dst: int = 0) -> Tuple[Any, float, float]:
+        """Pull with the per-layer streaming schedule exposed: returns
+        (blob, first_layer_landed, last_layer_landed). Decode admission
+        can start attending at the first time; the iteration that includes
+        the request only drains past the second (see `pipelined_finish`).
+        """
         p = self.parked.pop(rid)
         link = (p.src, dst)
         start = max(now, self._link_free_at.get(link, 0.0))
@@ -113,4 +146,5 @@ class TransferManager:
         self.total_time += dt
         self.layer_overlap_s += dt * (self.n_layers - 1) / self.n_layers
         self.times.append(dt)
-        return p.blob, start + dt
+        t_first, t_full = layered_times(start, dt, self.n_layers)
+        return p.blob, t_first, t_full

@@ -193,6 +193,15 @@ class LatencyModel:
         eff_len = min(prompt_len, c.sliding_window) if c.sliding_window else prompt_len
         return c.kv_bytes_per_token(self.dtype_bytes) * eff_len / bandwidth
 
+    def kv_transfer_first_layer_time(self, prompt_len: int,
+                                     bandwidth: float) -> float:
+        """Exposed transfer latency under per-layer streaming: layers ship
+        back-to-back, decode starts attending when layer 1 lands, so only
+        1/L of the wire time sits on the critical path before the first
+        decode iteration (the rest overlaps per-layer compute)."""
+        L = max(self.cfg.num_layers, 1)
+        return self.kv_transfer_time(prompt_len, bandwidth) / L
+
     def max_decode_batch(self, avg_ctx: float, par: Parallelism,
                          reserve: float = 0.35) -> int:
         """KV-capacity bound on the decode batch (paper §3.2)."""

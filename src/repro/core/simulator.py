@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
-from .kv_transfer import TransferManager, kv_bytes
+from .kv_transfer import TransferManager, kv_bytes, pipelined_finish
 from .latency_model import LatencyModel, Parallelism
 from .scheduler import (DisaggDispatcher, FCFSQueue, PagePool,
                         least_loaded)
@@ -176,6 +176,10 @@ class _DecodeInstance:
         self.pending: List[Request] = []  # parked on prefill side, assigned
         self.arrived: List[Request] = []  # transferred, joins at iter start
         self.in_transfer = 0
+        # rid -> last-layer-landed time for requests admitted while their
+        # KV is still streaming layer-by-layer (consumed by the first
+        # iteration they join; see `pipelined_finish`)
+        self.kv_full: Dict[int, float] = {}
         self.busy = False
         self.tree = tree                 # decode-side shared-prefix model
 
@@ -329,8 +333,8 @@ class SimDisaggBackend(_SimBackend):
             self._on_prefill_done(payload, t)
         elif kind == "decode_poke":
             self._try_start_decode(payload, t)
-        elif kind == "transfer_done":
-            self._on_transfer_done(payload, t)
+        elif kind == "transfer_first":
+            self._on_transfer_first(payload, t)
         elif kind == "decode_iter":
             self._on_decode_iter(payload, t)
 
@@ -441,9 +445,12 @@ class SimDisaggBackend(_SimBackend):
                 d.tree.match(r.tokens)      # LRU bump, mirrors insert_kv
                 n_full = (r.in_len // self.page_tokens) * self.page_tokens
                 d.tree.insert(r.tokens[:n_full])
-            _, t_done = self.tx.pull(r.rid, now, dst=d.iid)
+            _, t_first, t_full = self.tx.pull_layered(r.rid, now, dst=d.iid)
             state.where = ("transfer", d.iid)
-            self._ev.push(t_done, "transfer_done", (d, r))
+            # per-layer streaming: the request becomes joinable once the
+            # first layer lands; the last layer's arrival only gates the
+            # drain of the first iteration it joins (pipelined_finish)
+            self._ev.push(t_first, "transfer_first", (d, r, t_full))
         # blocked entries: amortized O(1) marking — entries only append at
         # the tail, so once we hit an already-marked one the rest are too
         # (goodput sweeps run deliberately overloaded; an O(pending) pass
@@ -454,15 +461,16 @@ class SimDisaggBackend(_SimBackend):
                 break
             st.to_status(RequestStatus.PENDING_ADMIT)
 
-    def _on_transfer_done(self, payload, t: float):
-        d, r = payload
+    def _on_transfer_first(self, payload, t: float):
+        d, r, t_full = payload
         state = self._states[r.rid]
         if state.done:      # cancelled on the wire: pages already freed
             return
-        r.transfer_done = t
+        r.transfer_done = t_full
         r.decode_admit = t
         d.in_transfer -= 1
         d.arrived.append(r)
+        d.kv_full[r.rid] = t_full
         state.where = ("arrived", d.iid)
         self._try_start_decode(d, t)
 
@@ -484,7 +492,16 @@ class SimDisaggBackend(_SimBackend):
         eff_b = max(len(d.running) / d.par.pp, 1.0)
         tau = self.lm.decode_time(eff_b, d.ctx_tokens() / d.par.pp,
                                   Parallelism(d.par.tp, 1))
-        self._ev.push(now + tau, "decode_iter", (d, tau))
+        end = now + tau
+        if d.kv_full:
+            for r in d.running:
+                kf = d.kv_full.pop(r.rid, None)
+                if kf is not None and kf > now:
+                    # layer l's attention waits on layer l's pages — the
+                    # same charge the live cluster applies
+                    end = max(end, pipelined_finish(now, tau, kf,
+                                                    self.tx.n_layers))
+        self._ev.push(end, "decode_iter", (d, tau))
 
     def _on_decode_iter(self, payload, t: float):
         d, tau = payload
@@ -546,12 +563,14 @@ class SimDisaggBackend(_SimBackend):
             d = self.D[loc]
             if r in d.arrived:
                 d.arrived.remove(r)
+            d.kv_full.pop(r.rid, None)
             d.pool.free(r.rid)
             self._ev.push(t, "decode_poke", d)
         elif stage == "running":
             d = self.D[loc]
             if r in d.running:
                 d.running.remove(r)
+            d.kv_full.pop(r.rid, None)
             d.pool.free(r.rid)
             self._ev.push(t, "decode_poke", d)
 

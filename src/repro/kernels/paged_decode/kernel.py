@@ -122,3 +122,50 @@ def paged_decode(q, k_pages, v_pages, block_table, lens, *,
             dimension_semantics=("parallel", "arbitrary")),
     )(block_table, lens, q, k_pages, v_pages)
     return out
+
+
+def _insert_kernel(pidx_ref, off_ref, knew_ref, vnew_ref, kin_ref, vin_ref,
+                   kout_ref, vout_ref, *, page_size: int):
+    b = pl.program_id(0)
+    off = off_ref[b]
+    sel = jax.lax.broadcasted_iota(jnp.int32, (page_size, 1, 1), 0) == off
+    kout_ref[0] = jnp.where(sel, knew_ref[0][None].astype(kout_ref.dtype),
+                            kin_ref[0])
+    vout_ref[0] = jnp.where(sel, vnew_ref[0][None].astype(vout_ref.dtype),
+                            vin_ref[0])
+
+
+def paged_insert(k_pages, v_pages, k_new, v_new, page_idx, offset, *,
+                 interpret: bool = False):
+    """In-place page-pool splice of one new token per sequence.
+
+    k/v_pages: (num_pages, page, Hkv, hd); k/v_new: (B, Hkv, hd);
+    page_idx/offset: (B,) i32 -> updated (k_pages, v_pages).
+
+    The grid visits only each sequence's target page (page_idx rides in
+    scalar-prefetch so the BlockSpec walks the indirection) and the pools
+    are donated via input_output_aliases — untouched pages are never read
+    or written, so the splice costs O(B * page) HBM traffic instead of
+    O(num_pages * page).
+    """
+    num_pages, page_size, Hkv, hd = k_pages.shape
+    B = k_new.shape[0]
+    grid = (B,)
+    new_spec = pl.BlockSpec((1, Hkv, hd), lambda b, pidx, off: (b, 0, 0))
+    pool_spec = pl.BlockSpec((1, page_size, Hkv, hd),
+                             lambda b, pidx, off: (pidx[b], 0, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_insert_kernel, page_size=page_size),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[new_spec, new_spec, pool_spec, pool_spec],
+            out_specs=[pool_spec, pool_spec],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+                   jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)],
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(page_idx, offset, k_new, v_new, k_pages, v_pages)

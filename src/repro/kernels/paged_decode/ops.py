@@ -5,8 +5,8 @@ from functools import partial
 
 import jax
 
-from .kernel import paged_decode
-from .ref import paged_decode_ref
+from .kernel import paged_decode, paged_insert
+from .ref import paged_decode_ref, paged_insert_ref
 
 
 def _on_tpu() -> bool:
@@ -24,4 +24,19 @@ def paged_decode_op(q, k_pages, v_pages, block_table, lens, *,
                                 scale=scale, softcap=softcap)
     return paged_decode(q, k_pages, v_pages, block_table, lens,
                         scale=scale, softcap=softcap,
+                        interpret=(impl == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def paged_insert_op(k_pages, v_pages, k_new, v_new, page_idx, offset, *,
+                    impl: str = "auto"):
+    """Splice one new token per sequence into the paged pools. The pallas
+    path aliases the pools in place (input_output_aliases); the ref path
+    relies on XLA's in-place scatter inside the enclosing jit."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return paged_insert_ref(k_pages, v_pages, k_new, v_new,
+                                page_idx, offset)
+    return paged_insert(k_pages, v_pages, k_new, v_new, page_idx, offset,
                         interpret=(impl == "interpret"))

@@ -31,3 +31,17 @@ def paged_decode_ref(q, k_pages, v_pages, block_table, lens, *,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhs,bshd->bhd", p, vr.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def paged_insert_ref(k_pages, v_pages, k_new, v_new, page_idx, offset):
+    """Scatter one new token per sequence into its page: k/v_pages
+    (num_pages, page, Hkv, hd); k/v_new (B, Hkv, hd); page_idx/offset (B,)
+    i32. Returns the updated (k_pages, v_pages).
+
+    This is byte-identical to the dense `.at[pidx, off].set(...)` splice
+    the model used before the kernel existed — the decode-token equality
+    tests pin that.
+    """
+    k_pages = k_pages.at[page_idx, offset].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[page_idx, offset].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages

@@ -1,0 +1,166 @@
+"""Pallas TPU fused suffix-prefill over paged prefix KV.
+
+A flash-prefill variant for the prefix-cache hot path: suffix queries
+attend over `n_prefix_pages` of shared prefix KV read *straight from the
+paged pool* (block-table-indexed BlockSpecs, same scalar-prefetch page walk
+as `paged_decode`) followed by their own fresh suffix KV with the offset
+causal mask. The dense `(B, P, Hkv, hd)` prefix gather the engine used to
+materialize never exists: the kv grid axis first walks the prefix pages,
+then the suffix blocks, carrying one online-softmax state (m, l, acc) in
+VMEM scratch across both phases.
+
+Grid: (batch, q_heads, q_blocks, n_prefix_pages + suffix_kv_blocks) with
+the combined kv axis innermost/sequential ("arbitrary"). The block table
+and the per-sequence prefix/suffix lengths ride in scalar-prefetch (SMEM)
+so the page indirection is resolved during pipelining and ragged lengths
+(including trash-padded table slots) are masked, not branched.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..compat import CompilerParams
+
+NEG_INF = -2.3819763e38
+
+
+def _kernel(tab_ref, plen_ref, slen_ref, q_ref, ks_ref, vs_ref,
+            kp_ref, vp_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, softcap: float, page_size: int, block_q: int,
+            block_kv: int, n_prefix_pages: int):
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (bq, hd)
+
+    def _accum(k, v, mask):
+        """One online-softmax step over a (bq, bkv) score tile."""
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(ik < n_prefix_pages)
+    def _prefix():
+        k = kp_ref[0, :, 0].astype(jnp.float32)         # (page, hd)
+        v = vp_ref[0, :, 0].astype(jnp.float32)
+        # global prefix position vs ragged prefix length: masks both the
+        # tail of a partially-filled page and trash-padded table slots
+        kpos = ik * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page_size), 1)
+        _accum(k, v, kpos < plen_ref[b])
+
+    @pl.when(ik >= n_prefix_pages)
+    def _suffix():
+        k = ks_ref[0, 0].astype(jnp.float32)            # (bkv, hd)
+        v = vs_ref[0, 0].astype(jnp.float32)
+        j = ik - n_prefix_pages
+        qpos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        kpos = j * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        # suffix-local causal: every suffix query already sees the whole
+        # prefix, so the offset cancels and the mask is purely local
+        _accum(k, v, (kpos <= qpos) & (kpos < slen_ref[b]))
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        den = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / den[:, None]).astype(o_ref.dtype)
+
+
+def prefix_prefill(q, k_suf, v_suf, k_pages, v_pages, prefix_table,
+                   prefix_lens, suffix_lens=None, *, scale=None,
+                   softcap: float = 0.0, block_q: int = 128,
+                   block_kv: int = 256, interpret: bool = False):
+    """q: (B, H, Sq, hd); k/v_suf: (B, Hkv, Sq, hd);
+    k/v_pages: (num_pages, page, Hkv, hd); prefix_table: (B, npp) i32;
+    prefix_lens: (B,) i32; suffix_lens: (B,) i32 or None -> (B, H, Sq, hd).
+    """
+    B, H, Sq, hd = q.shape
+    _, Hkv, _, _ = k_suf.shape
+    page_size = k_pages.shape[1]
+    npp = prefix_table.shape[1]
+    assert npp >= 1, "prefix_prefill needs >= 1 prefix page (else use flash)"
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if suffix_lens is None:
+        suffix_lens = jnp.full((B,), Sq, jnp.int32)
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Sq)
+    pq = (-Sq) % block_q
+    pkv = (-Sq) % block_kv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pkv:
+        k_suf = jnp.pad(k_suf, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        v_suf = jnp.pad(v_suf, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+    nq = (Sq + pq) // block_q
+    nsk = (Sq + pkv) // block_kv
+
+    grid = (B, H, nq, npp + nsk)
+    # suffix blocks only advance once ik passes the prefix pages; the page
+    # index is clamped symmetrically so the inactive branch stays in range
+    suf_spec = pl.BlockSpec(
+        (1, 1, block_kv, hd),
+        lambda b, h, iq, ik, tab, pl_, sl: (
+            b, h // G, jnp.clip(ik - npp, 0, nsk - 1), 0))
+    page_spec = pl.BlockSpec(
+        (1, page_size, 1, hd),
+        lambda b, h, iq, ik, tab, pl_, sl: (
+            tab[b, jnp.minimum(ik, npp - 1)], 0, h // G, 0))
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, softcap=softcap,
+                          page_size=page_size, block_q=block_q,
+                          block_kv=block_kv, n_prefix_pages=npp),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, hd),
+                             lambda b, h, iq, ik, tab, pl_, sl: (b, h, iq, 0)),
+                suf_spec, suf_spec, page_spec, page_spec,
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, block_q, hd),
+                lambda b, h, iq, ik, tab, pl_, sl: (b, h, iq, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(prefix_table, prefix_lens, suffix_lens, q, k_suf, v_suf,
+      k_pages, v_pages)
+    return out[:, :, :Sq]

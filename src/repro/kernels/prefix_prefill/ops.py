@@ -1,0 +1,47 @@
+"""Jitted wrapper for fused suffix-prefill over paged prefix KV.
+
+Takes the model layout — q/k/v as (B, S, heads, hd) — transposes to the
+kernel's (B, heads, S, hd) layout, and dispatches: Pallas on TPU, the dense
+jnp oracle elsewhere (`impl="interpret"` forces the kernel through the
+Pallas interpreter for parity tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import prefix_prefill
+from .ref import prefix_prefill_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("scale", "softcap", "block_q",
+                                   "block_kv", "impl"))
+def prefix_prefill_op(q, k_suf, v_suf, k_pages, v_pages, prefix_table,
+                      prefix_lens, suffix_lens=None, *, scale: float = None,
+                      softcap: float = 0.0, block_q: int = 128,
+                      block_kv: int = 256, impl: str = "auto"):
+    """q: (B, S, H, hd); k/v_suf: (B, S, Hkv, hd);
+    k/v_pages: (num_pages, page, Hkv, hd); prefix_table: (B, npp) i32;
+    prefix_lens: (B,) i32; suffix_lens: (B,) i32 or None -> (B, S, H, hd).
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k_suf.transpose(0, 2, 1, 3)
+    vt = v_suf.transpose(0, 2, 1, 3)
+    if impl == "ref":
+        out = prefix_prefill_ref(qt, kt, vt, k_pages, v_pages, prefix_table,
+                                 prefix_lens, suffix_lens, scale=scale,
+                                 softcap=softcap)
+    else:
+        out = prefix_prefill(qt, kt, vt, k_pages, v_pages, prefix_table,
+                             prefix_lens, suffix_lens, scale=scale,
+                             softcap=softcap, block_q=block_q,
+                             block_kv=block_kv,
+                             interpret=(impl == "interpret"))
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for fused suffix-prefill over paged prefix KV.
+
+Suffix queries attend over (a) a shared prefix that lives in the paged KV
+pool, addressed through a block table, and (b) their own fresh suffix KV,
+with the causal mask offset by the prefix length. The reference gathers the
+prefix pages densely (exactly what the kernel must avoid) and runs a masked
+softmax in f32 — it is the numeric ground truth for interpret-mode parity.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def prefix_prefill_ref(q, k_suf, v_suf, k_pages, v_pages, prefix_table,
+                       prefix_lens, suffix_lens=None, *, scale=None,
+                       softcap: float = 0.0):
+    """q: (B, H, Sq, hd); k/v_suf: (B, Hkv, Sq, hd);
+    k/v_pages: (num_pages, page, Hkv, hd); prefix_table: (B, npp) i32;
+    prefix_lens: (B,) i32 — valid prefix tokens per sequence (rest of the
+    gathered pages, incl. trash-padded table slots, is masked);
+    suffix_lens: (B,) i32 or None — valid suffix tokens (default Sq).
+    Returns (B, H, Sq, hd).
+    """
+    B, H, Sq, hd = q.shape
+    Hkv = k_suf.shape[1]
+    page = k_pages.shape[1]
+    npp = prefix_table.shape[1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if suffix_lens is None:
+        suffix_lens = jnp.full((B,), Sq, jnp.int32)
+
+    # dense gather of the paged prefix: (B, npp*page, Hkv, hd)
+    kp = k_pages[prefix_table].reshape(B, npp * page, Hkv, hd)
+    vp = v_pages[prefix_table].reshape(B, npp * page, Hkv, hd)
+    # (B, Hkv, P + Sq, hd)
+    k = jnp.concatenate([kp.transpose(0, 2, 1, 3), k_suf], axis=2)
+    v = jnp.concatenate([vp.transpose(0, 2, 1, 3), v_suf], axis=2)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=1)
+        v = jnp.repeat(v, G, axis=1)
+
+    P = npp * page
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    kpos = jnp.arange(P + Sq)[None, None, None, :]
+    qpos = jnp.arange(Sq)[None, None, :, None]
+    plen = prefix_lens[:, None, None, None]
+    slen = suffix_lens[:, None, None, None]
+    in_prefix = kpos < P
+    mask = jnp.where(in_prefix, kpos < plen,
+                     ((kpos - P) <= qpos) & ((kpos - P) < slen))
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-37)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

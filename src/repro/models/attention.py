@@ -44,8 +44,15 @@ def _band_tiles(n_q: int, n_kv: int, block_q: int, block_kv: int,
 def flash_reference(q, k, v, *, causal=True, window: int = 0,
                     block_q: int = 512, block_kv: int = 512,
                     scale: Optional[float] = None,
-                    logit_softcap: float = 0.0):
+                    logit_softcap: float = 0.0,
+                    prefix_len: Optional[jax.Array] = None):
     """q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd). GQA by head-group repeat.
+
+    When Sq < Skv the leading Skv - Sq kv positions are a prefix every
+    query sees (offset causal mask). `prefix_len` (scalar) additionally
+    marks only the first `prefix_len` of those positions valid — the rest
+    is padding (e.g. a bucketed dense gather over trash pages) and is
+    masked out.
 
     Returns (B, Sq, H, hd).
     """
@@ -100,6 +107,9 @@ def flash_reference(q, k, v, *, causal=True, window: int = 0,
         if window:
             mask = mask & (kpos[None, :] > Skv - Sq + qpos[:, None] - window)
         mask = mask & (kpos[None, :] < Skv)    # kv padding
+        if prefix_len is not None:
+            mask = mask & ((kpos[None, :] < prefix_len)
+                           | (kpos[None, :] >= Skv - Sq))
         s = jnp.where(mask[None, None, None], s, NEG_INF)
 
         # reshape helpers: s is (B, Hkv, G, bq, bkv)

@@ -143,19 +143,33 @@ def _qkv(p, x, cfg, positions, theta):
 
 
 def attn_full(p, x, cfg, kind, positions, attn_blocks=(512, 512),
-              prefix=None):
+              prefix=None, prefix_len=None, paged_prefix=None):
     """Full-sequence attention (train / prefill). Returns (out, (k, v)).
 
     `prefix` is an optional (k, v) pair of already-roped cached KV for
     positions before this chunk (shape (B, P, Hkv, hd)): queries attend
     over [prefix, self] with the causal offset handled by
-    `flash_reference`'s Sq < Skv masking. The returned cache carries only
-    this chunk's KV — the prefix stays where it was cached."""
+    `flash_reference`'s Sq < Skv masking; `prefix_len` (scalar) marks how
+    many of those P positions are live when the gather was padded to a
+    bucket. `paged_prefix` = (k_pages, v_pages, block_table, prefix_lens)
+    instead reads the prefix straight from the paged pool via the fused
+    `prefix_prefill` kernel — no dense prefix is ever materialized. The
+    returned cache carries only this chunk's KV — the prefix stays where
+    it was cached."""
     window = cfg.sliding_window if _is_windowed(kind, cfg) else 0
     assert prefix is None or window == 0, "prefix reuse needs full attention"
+    assert paged_prefix is None or window == 0
     q, k, v = _qkv(p, x, cfg, positions, _rope_theta(kind, cfg))
     q = shard(q, "batch", None, "heads", None)
     k = shard(k, "batch", None, "kv_heads", None)
+    if paged_prefix is not None:
+        from ..kernels.prefix_prefill.ops import prefix_prefill_op
+        kp_l, vp_l, table, plens = paged_prefix
+        o = prefix_prefill_op(q, k, v, kp_l, vp_l, table, plens,
+                              block_q=attn_blocks[0],
+                              block_kv=attn_blocks[1],
+                              softcap=cfg.attn_logit_softcap)
+        return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype)), (k, v)
     ka, va = k, v
     if prefix is not None:
         pk, pv = prefix
@@ -163,7 +177,8 @@ def attn_full(p, x, cfg, kind, positions, attn_blocks=(512, 512),
         va = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
     o = flash_reference(q, ka, va, causal=True, window=window,
                         block_q=attn_blocks[0], block_kv=attn_blocks[1],
-                        logit_softcap=cfg.attn_logit_softcap)
+                        logit_softcap=cfg.attn_logit_softcap,
+                        prefix_len=prefix_len)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype)), (k, v)
 
 
@@ -207,10 +222,12 @@ def embed_tokens(params, tokens, cfg, frontend_embeds=None):
     return x
 
 
-def _layer_body(x, pl, cfg, kind, positions, attn_blocks, prefix=None):
+def _layer_body(x, pl, cfg, kind, positions, attn_blocks, prefix=None,
+                prefix_len=None, paged_prefix=None):
     h = apply_norm(x, pl["ln1"], cfg)
     a, kv = attn_full(pl["attn"], h, cfg, kind, positions, attn_blocks,
-                      prefix=prefix)
+                      prefix=prefix, prefix_len=prefix_len,
+                      paged_prefix=paged_prefix)
     x = x + a
     h = apply_norm(x, pl["ln2"], cfg)
     f, aux = _ffn(pl, h, cfg, kind)
@@ -221,14 +238,25 @@ def _layer_body(x, pl, cfg, kind, positions, attn_blocks, prefix=None):
 
 def forward(params, tokens, cfg, *, frontend_embeds=None, remat=False,
             attn_blocks=(512, 512), return_cache=False, max_len=None,
-            prefix_kv=None, pos_offset=0, last_pos=None):
+            prefix_kv=None, prefix_pages=None, prefix_table=None,
+            prefix_len=None, pos_offset=0, last_pos=None):
     """Full-sequence forward. tokens: (B, S_text). Returns (logits, cache, aux).
 
     Prefix reuse (serving prefix cache): `prefix_kv` maps segment names to
     {"k", "v"} arrays of shape (layers, B, P, Hkv, hd) holding the cached,
     already-roped KV of the first P prompt positions; `tokens` then covers
     only the uncached suffix and `pos_offset` (= P) shifts its rope
-    positions. `last_pos` picks which position's logits to return when
+    positions. When the gather was padded to a bucket, `prefix_len`
+    (scalar or (B,)) marks how many of the P positions are live.
+
+    Fused paged path: `prefix_pages` maps segment names to {"k", "v"}
+    *page pools* of shape (layers, num_pages, page_size, Hkv, hd) and
+    `prefix_table` (B, npp) i32 addresses the prefix pages directly —
+    attention runs the fused `prefix_prefill` kernel, never gathering the
+    prefix densely. `prefix_len` then must be given ((B,) i32 live prefix
+    tokens; trash-padded table slots are masked).
+
+    `last_pos` picks which position's logits to return when
     `return_cache` (defaults to the final one — callers that right-pad
     pass the last *real* index)."""
     x = embed_tokens(params, tokens, cfg, frontend_embeds)
@@ -236,19 +264,28 @@ def forward(params, tokens, cfg, *, frontend_embeds=None, remat=False,
     B, S, _ = x.shape
     positions = (jnp.asarray(pos_offset, jnp.int32)
                  + jnp.arange(S, dtype=jnp.int32))[None, :]
+    if prefix_pages is not None:
+        assert prefix_table is not None and prefix_len is not None
+        plens = jnp.broadcast_to(jnp.asarray(prefix_len, jnp.int32), (B,))
     aux_total = 0.0
     cache: Dict[str, Any] = {}
     for i, seg in enumerate(layer_plan(cfg)):
         pkv = prefix_kv.get(f"seg{i}") if prefix_kv is not None else None
+        ppg = prefix_pages.get(f"seg{i}") if prefix_pages is not None else None
 
-        def body(x, layer, _kind=seg.kind, _pkv=pkv):
-            if _pkv is None:
-                pl, prefix = layer, None
-            else:
+        def body(x, layer, _kind=seg.kind, _pkv=pkv, _ppg=ppg):
+            prefix = paged = None
+            if _pkv is not None:
                 pl, pk_l, pv_l = layer
                 prefix = (pk_l, pv_l)
+            elif _ppg is not None:
+                pl, kp_l, vp_l = layer
+                paged = (kp_l, vp_l, prefix_table, plens)
+            else:
+                pl = layer
             x, kv, aux = _layer_body(x, pl, cfg, _kind, positions, attn_blocks,
-                                     prefix=prefix)
+                                     prefix=prefix, prefix_len=prefix_len,
+                                     paged_prefix=paged)
             if not return_cache:
                 kv = (jnp.zeros((), x.dtype),) * 2  # don't carry KV in train
             return x, (kv, aux)
@@ -256,8 +293,12 @@ def forward(params, tokens, cfg, *, frontend_embeds=None, remat=False,
             body = jax.checkpoint(
                 body, policy=jax.checkpoint_policies.nothing_saveable,
                 static_argnums=())
-        xs = (params[f"seg{i}"] if pkv is None
-              else (params[f"seg{i}"], pkv["k"], pkv["v"]))
+        if pkv is not None:
+            xs = (params[f"seg{i}"], pkv["k"], pkv["v"])
+        elif ppg is not None:
+            xs = (params[f"seg{i}"], ppg["k"], ppg["v"])
+        else:
+            xs = params[f"seg{i}"]
         x, (kvs, auxs) = jax.lax.scan(body, x, xs)
         aux_total = aux_total + jnp.sum(auxs)
         if return_cache:
@@ -353,7 +394,7 @@ def decode_step_paged(params, cache, tokens, cfg):
     if cfg.embedding_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     x = shard(x, "batch", "embed_act")
-    from ..kernels.paged_decode.ops import paged_decode_op
+    from ..kernels.paged_decode.ops import paged_decode_op, paged_insert_op
     pos = cache["pos"]
     table = cache["block_tables"]
     B = tokens.shape[0]
@@ -376,8 +417,10 @@ def decode_step_paged(params, cache, tokens, cfg):
             q, k, v = _qkv(pl["attn"], h[:, None], cfg, pos[:, None],
                            _rope_theta(_kind, cfg))
             q, k, v = q[:, 0], k[:, 0], v[:, 0]
-            kc_l = kc_l.at[pidx, off].set(k.astype(kc_l.dtype))
-            vc_l = vc_l.at[pidx, off].set(v.astype(vc_l.dtype))
+            # splice through the paged_insert kernel: the fresh token's KV
+            # feeds attention without a dense detour (ref path is the same
+            # .at[pidx, off].set scatter, so tokens stay byte-identical)
+            kc_l, vc_l = paged_insert_op(kc_l, vc_l, k, v, pidx, off)
             o = paged_decode_op(q, kc_l, vc_l, table, lens,
                                 softcap=cfg.attn_logit_softcap)
             a = jnp.einsum("bhk,hkd->bd", o, pl["attn"]["wo"].astype(o.dtype))

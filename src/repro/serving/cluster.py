@@ -27,12 +27,12 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.fault import HeartbeatMonitor, plan_failover
-from ..core.kv_transfer import TransferManager, kv_bytes
+from ..core.kv_transfer import TransferManager, kv_bytes, pipelined_finish
 from ..core.scheduler import DisaggDispatcher, FCFSQueue, least_loaded
 from ..core.workload import Request
 from .api import (FINISH_FAILED, GREEDY, BackendBase, RequestState,
                   RequestStatus, ServedResult, sequence_tokens)
-from .engine import Engine, Sequence
+from .engine import Engine, KVBlob, Sequence, release_blob
 
 __all__ = ["DisaggCluster", "ColocatedCluster", "ServedResult"]
 
@@ -96,6 +96,7 @@ class DisaggCluster(_LiveBackend):
                  paged: Optional[bool] = None,
                  prefix_cache: bool = False,
                  prefill_num_pages: Optional[int] = None,
+                 fused_prefix: Optional[bool] = None,
                  seed: int = 0, tracker=None):
         self._init_live(cfg, seed, tracker=tracker)
         if prefix_cache and prefill_num_pages is None:
@@ -107,7 +108,8 @@ class DisaggCluster(_LiveBackend):
                                attn_blocks=attn_blocks, paged=paged,
                                page_size=page_size,
                                num_pages=prefill_num_pages,
-                               prefix_cache=prefix_cache)
+                               prefix_cache=prefix_cache,
+                               fused_prefix=fused_prefix)
                         for _ in range(n_prefill)]
         self.decode = [Engine(cfg, params, max_batch=max_batch,
                               max_len=max_len, attn_blocks=attn_blocks,
@@ -217,6 +219,7 @@ class DisaggCluster(_LiveBackend):
             req.first_token = now + dt
             self._emit_token(state, first, now + dt)
             if seq.done:
+                release_blob(blob)      # nothing will migrate: drop pins
                 self._finish_state(state, now + dt)
             else:
                 # decode target (and hence shipped bytes) is chosen at
@@ -228,7 +231,8 @@ class DisaggCluster(_LiveBackend):
     def _on_dispatch_decode(self, payload, t: float):
         state, blob, src = payload
         if state.done:                      # cancelled mid-prefill: the
-            return                          # blob is dropped, nothing held
+            release_blob(blob)              # blob is dropped (fused blobs
+            return                          # release their prefix pins)
         seq, req = state.seq, state.request
         alive = self._alive_d()
         loads = [len(self._d_active[i]) + len(self._d_pending[i])
@@ -266,11 +270,22 @@ class DisaggCluster(_LiveBackend):
                                           len(pending[0][2])):
                 state, skip, pinned = pending.pop(0)
                 seq, req = state.seq, state.request
-                blob, t_done = self.tx.pull(seq.rid, now, dst=i)
-                d.insert_kv(seq, _slice_blob(blob, skip), shared=pinned,
-                            skip_tokens=skip)
+                blob, t_first, t_full = self.tx.pull_layered(seq.rid, now,
+                                                             dst=i)
+                if isinstance(blob, KVBlob):
+                    # fused-prefix blob: the prefill engine stitches the
+                    # wire payload from its page pool (and drops its pins)
+                    wire = blob.owner.materialize_wire(blob, skip)
+                else:
+                    wire = _slice_blob(blob, skip)
+                d.insert_kv(seq, wire, shared=pinned, skip_tokens=skip)
                 d.unpin(pinned)
-                req.decode_admit = max(now, t_done)
+                # per-layer streaming: decode starts attending once the
+                # first layer's pages land, not at blob-complete
+                seq.kv_first = max(now, t_first)
+                seq.kv_full = t_full
+                req.decode_admit = seq.kv_first
+                req.transfer_done = t_full
                 state.to_status(RequestStatus.DECODING)
                 self._d_active[i].append(seq)
 
@@ -298,6 +313,14 @@ class DisaggCluster(_LiveBackend):
         batch = self._d_active[i]
         dt = d.decode_step(batch)
         done_t = now + dt
+        for seq in batch:
+            if seq.kv_full > now:
+                # a member's later layers are still crossing the wire:
+                # layer l's attention runs only after layer l lands, so
+                # the iteration drains at the pipelined finish time
+                done_t = max(done_t, pipelined_finish(
+                    now, dt, seq.kv_full, self.tx.n_layers))
+            seq.kv_first = seq.kv_full = 0.0
         self._d_free[i] = done_t
         still = []
         for seq in batch:
@@ -362,7 +385,9 @@ class DisaggCluster(_LiveBackend):
                     del pending[j]
                     self.decode[di].cancel(seq, pinned)
                     break
-            self.tx.cancel(state.rid)
+            p = self.tx.cancel(state.rid)
+            if p is not None:
+                release_blob(p.blob)        # drop prefill-side prefix pins
             self._ev.push(t, "poke_decode", di)  # head may admit now
         elif state.status is RequestStatus.DECODING:
             _, di = state.where

@@ -36,6 +36,37 @@ _BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 
 
 @dataclasses.dataclass
+class KVBlob:
+    """Migration payload handed to the transfer layer.
+
+    On the fused prefix path `cache` carries only the *suffix* KV: the
+    prefix tokens stay in the owning prefill engine's page pool, pinned
+    via `prefix_pages` until `Engine.materialize_wire` stitches the wire
+    payload (gathering only the pages the decode side actually needs) or
+    `release_blob` drops the claim. Unpacks like the legacy
+    `(cache, n_tok)` tuple for non-prefix consumers."""
+    cache: Any
+    n_tok: int
+    prefix_tokens: int = 0
+    prefix_pages: List[int] = dataclasses.field(default_factory=list)
+    owner: Optional["Engine"] = None
+
+    def __iter__(self):
+        return iter((self.cache, self.n_tok))
+
+    def __getitem__(self, i):
+        return (self.cache, self.n_tok)[i]
+
+
+def release_blob(blob):
+    """Drop a blob's claim on its owner's prefix pages (no-op for legacy
+    tuple blobs and for blobs already materialized)."""
+    if isinstance(blob, KVBlob) and blob.prefix_pages:
+        blob.owner.unpin(blob.prefix_pages)
+        blob.prefix_pages = []
+
+
+@dataclasses.dataclass
 class Sequence:
     rid: int
     tokens: List[int]
@@ -45,6 +76,8 @@ class Sequence:
     done: bool = False
     prefix_hit: int = 0         # prefill-side cached-prefix tokens
     decode_hit: int = 0         # decode-side shared-prefix tokens
+    kv_first: float = 0.0       # when the first layer's KV landed (stream)
+    kv_full: float = 0.0        # when the last layer's KV lands (stream)
     sampling: Optional[SamplingParams] = None
     finish_reason: str = FINISH_LENGTH
     _rng: Any = None            # lazy, only for temperature > 0
@@ -75,7 +108,8 @@ class Engine:
                  dtype=jnp.float32, page_size: int = 16,
                  num_pages: Optional[int] = None,
                  paged: Optional[bool] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 fused_prefix: Optional[bool] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.dtype = dtype
@@ -107,10 +141,16 @@ class Engine:
         self.prefix_caching = bool(prefix_cache and self.paged)
         self.prefix_cache = (RadixPrefixCache(page_size, allocator=self._kv)
                              if self.prefix_caching else None)
+        # fused paged-prefix prefill (prefix_prefill kernel) is the default
+        # on paged archs; the dense-gather fallback stays behind the flag
+        # for non-paged archs and for A/B token-equality tests
+        self.fused_prefix = (self.prefix_caching if fused_prefix is None
+                             else bool(fused_prefix and self.prefix_caching))
         self._cache = self._empty_cache()
         self._slot_free = list(range(max_batch))
         self._prefill_fn: Dict[int, Any] = {}
         self._suffix_fn: Dict[Tuple[int, int], Any] = {}
+        self._fused_fn: Dict[Tuple[int, int], Any] = {}
         self._insert_fn: Dict[Tuple[int, int], Any] = {}
         self._gather_fn: Dict[int, Any] = {}
         self._write_fn: Dict[Tuple[int, int], Any] = {}
@@ -156,22 +196,59 @@ class Engine:
         return self._prefill_fn[bucket]
 
     def _get_suffix_prefill_fn(self, bucket: int, n_prefix_pages: int):
-        """Prefill only the uncached suffix: queries attend over the
-        gathered prefix KV + themselves (exact attention, offset causal
-        mask), so the returned logits/KV match a full prefill."""
+        """Dense-gather fallback: prefill only the uncached suffix, with
+        queries attending over the gathered prefix KV + themselves (exact
+        attention, offset causal mask). `n_prefix_pages` is a power-of-two
+        bucket — the gather is trash-padded to it and `plen` masks the
+        padding — so the jit cache stays O(log pages), not O(pages)."""
         key = (bucket, n_prefix_pages)
         if key not in self._suffix_fn:
-            def _sf(params, toks, prefix_kv, offset, last_pos):
+            def _sf(params, toks, prefix_kv, plen, offset, last_pos):
                 mod = self.model
                 from ..models import api as _api
                 m = _api._mod(mod.cfg)
                 logits, cache, _ = m.forward(
                     params, toks, mod.cfg, attn_blocks=self.attn_blocks,
                     return_cache=True, max_len=None, prefix_kv=prefix_kv,
-                    pos_offset=offset, last_pos=last_pos)
+                    prefix_len=plen, pos_offset=offset, last_pos=last_pos)
                 return logits, cache
             self._suffix_fn[key] = jax.jit(_sf)
         return self._suffix_fn[key]
+
+    def _get_fused_suffix_fn(self, bucket: int, n_prefix_pages: int):
+        """Fused paged-prefix prefill: suffix queries attend over the
+        prefix straight from the page pools through the `prefix_prefill`
+        kernel — no dense prefix KV is ever materialized. `n_prefix_pages`
+        is a power-of-two bucket; the block table is trash-padded to it
+        and `plen` masks the padding."""
+        key = (bucket, n_prefix_pages)
+        if key not in self._fused_fn:
+            seg_names = [k for k in self._cache if k.startswith("seg")]
+
+            def _ff(params, toks, pools, table, plen, offset, last_pos):
+                mod = self.model
+                from ..models import api as _api
+                m = _api._mod(mod.cfg)
+                pages = {name: pools[name] for name in seg_names}
+                logits, cache, _ = m.forward(
+                    params, toks, mod.cfg, attn_blocks=self.attn_blocks,
+                    return_cache=True, max_len=None, prefix_pages=pages,
+                    prefix_table=table, prefix_len=plen,
+                    pos_offset=offset, last_pos=last_pos)
+                return logits, cache
+            self._fused_fn[key] = jax.jit(_ff)
+        return self._fused_fn[key]
+
+    def _bucket_pages(self, n: int) -> int:
+        """Power-of-two page-count bucket (capped at a full sequence) so
+        long-running serving compiles O(log pages) suffix/gather variants
+        instead of one per distinct prefix length."""
+        pps = -(-self.max_len // self._kv.page_size)
+        return min(1 << max(n - 1, 0).bit_length(), pps) if n else 0
+
+    def _padded_page_ids(self, pages: List[int], n_bucket: int):
+        return jnp.asarray(list(pages) + [TRASH_PAGE] * (n_bucket - len(pages)),
+                           jnp.int32)
 
     def _get_gather_fn(self, n_pages: int):
         """Gather `n_pages` pool pages into a dense (layers, 1, n*ps, Hkv,
@@ -335,11 +412,29 @@ class Engine:
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :Ssuf] = suffix
         t0 = time.perf_counter()
-        if hit:
-            prefix_kv = self._get_gather_fn(len(hit_pages))(
-                self._cache, jnp.asarray(hit_pages, jnp.int32))
-            fn = self._get_suffix_prefill_fn(bucket, len(hit_pages))
+        prefix_kv = None
+        fused = bool(hit and self.fused_prefix)
+        if fused:
+            # fused hot path: suffix queries attend over the prefix pages
+            # in place (prefix_prefill kernel) — no dense gather at all
+            npb = self._bucket_pages(len(hit_pages))
+            table = self._padded_page_ids(hit_pages, npb)[None]
+            pools = {k: v for k, v in self._cache.items()
+                     if k.startswith("seg")}
+            fn = self._get_fused_suffix_fn(bucket, npb)
+            logits, cache = fn(self.params, jnp.asarray(padded), pools,
+                               table, jnp.asarray(hit, jnp.int32),
+                               jnp.asarray(hit, jnp.int32),
+                               jnp.asarray(Ssuf - 1, jnp.int32))
+        elif hit:
+            # flagged fallback: dense gather padded to the page bucket,
+            # with the padding masked out by plen
+            npb = self._bucket_pages(len(hit_pages))
+            prefix_kv = self._get_gather_fn(npb)(
+                self._cache, self._padded_page_ids(hit_pages, npb))
+            fn = self._get_suffix_prefill_fn(bucket, npb)
             logits, cache = fn(self.params, jnp.asarray(padded), prefix_kv,
+                               jnp.asarray(hit, jnp.int32),
                                jnp.asarray(hit, jnp.int32),
                                jnp.asarray(Ssuf - 1, jnp.int32))
         else:
@@ -348,17 +443,19 @@ class Engine:
                                jnp.asarray(Ssuf - 1, jnp.int32))
         first = self._sample_token(seq, logits[0, 0])
 
-        # the migration blob is stitched host-of-pool: already-gathered
-        # prefix KV + the freshly computed suffix (never a second gather
-        # of the hit pages)
+        # the migration blob: on the fused path it carries only the suffix
+        # KV (the prefix stays pinned in the page pool until the transfer
+        # layer materializes the wire payload); on the fallback path it is
+        # stitched from the already-gathered prefix KV + fresh suffix
+        # (never a second gather of the hit pages)
         blob_cache = {}
         for name, seg in cache.items():
             if not name.startswith("seg"):
                 continue
-            if hit:
+            if prefix_kv is not None:
                 pk = prefix_kv[name]
                 blob_cache[name] = {
-                    p: jnp.concatenate([pk[p], seg[p]], axis=2)
+                    p: jnp.concatenate([pk[p][:, :, :hit], seg[p]], axis=2)
                     for p in ("k", "v")}
             else:
                 blob_cache[name] = {p: seg[p] for p in ("k", "v")}
@@ -383,8 +480,6 @@ class Engine:
             self.prefix_cache.insert(token_list[:(S // ps) * ps],
                                      table[:S // ps])
             self._kv.free(seq.rid)          # tree refs keep shared pages
-        if hit_pages:
-            self._kv.release(hit_pages)     # unpin
         jax.block_until_ready(blob_cache)
         dt = time.perf_counter() - t0
         self.clock += dt
@@ -392,7 +487,53 @@ class Engine:
         self.prefill_tokens += Ssuf
         self.prefix_hit_tokens += hit
         seq.prefix_hit = hit
+        if fused:
+            # the blob keeps the pin: pages must survive tree eviction
+            # until materialize_wire/release_blob
+            return first, KVBlob(blob_cache, S, prefix_tokens=hit,
+                                 prefix_pages=hit_pages, owner=self), dt
+        if hit_pages:
+            self._kv.release(hit_pages)     # unpin
         return first, (blob_cache, S), dt
+
+    def materialize_wire(self, blob, skip_tokens: int = 0):
+        """Stitch the wire payload actually shipped to the decode side.
+
+        For a fused-path `KVBlob`, gathers only the prefix pages beyond
+        `skip_tokens` (positions the decode side already holds) and
+        concatenates the suffix KV — the decode-side cached prefix is
+        never gathered or shipped. Drops the blob's page pins. For legacy
+        tuple blobs, slices the dense cache at `skip_tokens`. Returns the
+        (cache, n_tok) tuple `insert_kv` consumes, whose seg token axis
+        starts at position `skip_tokens`."""
+        if not isinstance(blob, KVBlob):
+            cache, n_tok = blob
+            if skip_tokens:
+                cache = {k: ({p: v[p][:, :, skip_tokens:] for p in ("k", "v")}
+                             if k.startswith("seg") else v)
+                         for k, v in cache.items()}
+            return cache, n_tok
+        ps = self._kv.page_size
+        hit = blob.prefix_tokens
+        Ssuf = blob.n_tok - hit
+        out = {}
+        if skip_tokens < hit:
+            assert skip_tokens % ps == 0
+            ship_pages = blob.prefix_pages[skip_tokens // ps:]
+            npb = self._bucket_pages(len(ship_pages))
+            pk = self._get_gather_fn(npb)(
+                self._cache, self._padded_page_ids(ship_pages, npb))
+            span = len(ship_pages) * ps
+            for name, seg in blob.cache.items():
+                out[name] = {p: jnp.concatenate(
+                    [pk[name][p][:, :, :span], seg[p][:, :, :Ssuf]], axis=2)
+                    for p in ("k", "v")}
+        else:
+            cut = skip_tokens - hit
+            for name, seg in blob.cache.items():
+                out[name] = {p: seg[p][:, :, cut:Ssuf] for p in ("k", "v")}
+        release_blob(blob)
+        return out, blob.n_tok
 
     def kv_blob_bytes(self, kv_blob) -> int:
         cache, _ = kv_blob

@@ -38,8 +38,9 @@ pools at the freshly allocated page ids — O(pages written), never a
 full-cache rewrite — and the device block-table row for the sequence's
 batch slot is overwritten with shared + fresh ids.
 
-Follow-on work (see ROADMAP): preemption (page stealing with re-prefill)
-and per-layer streaming admission.
+Follow-on work (see ROADMAP): preemption (page stealing with
+re-prefill). Per-layer streaming admission landed with the fused
+prefix-prefill PR (core/kv_transfer.pull_layered).
 """
 from __future__ import annotations
 

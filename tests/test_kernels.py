@@ -6,8 +6,10 @@ import pytest
 
 from repro.kernels.flash_prefill.kernel import flash_prefill
 from repro.kernels.flash_prefill.ref import flash_prefill_ref
-from repro.kernels.paged_decode.kernel import paged_decode
-from repro.kernels.paged_decode.ref import paged_decode_ref
+from repro.kernels.paged_decode.kernel import paged_decode, paged_insert
+from repro.kernels.paged_decode.ref import paged_decode_ref, paged_insert_ref
+from repro.kernels.prefix_prefill.kernel import prefix_prefill
+from repro.kernels.prefix_prefill.ref import prefix_prefill_ref
 from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_scan_ref, ssd_scan_sequential
 
@@ -72,6 +74,101 @@ def test_paged_decode_full_page_boundary():
     ref = paged_decode_ref(q, kp, vp, table, lens)
     out = paged_decode(q, kp, vp, table, lens, interpret=True)
     np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, H, Hkv, Sq, hd, num_pages, page, npp)
+    (2, 4, 2, 64, 64, 16, 16, 3),      # GQA 2:1
+    (1, 8, 1, 96, 64, 32, 8, 6),       # MQA, ragged q blocks
+    (2, 4, 4, 128, 128, 16, 16, 2),    # MHA, hd 128
+    (1, 2, 2, 32, 32, 8, 32, 1),       # single prefix page
+])
+def test_prefix_prefill_sweep(shape, dtype):
+    B, H, Hkv, Sq, hd, pages, page, npp = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Sq, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Sq, hd), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[3], (pages, page, Hkv, hd), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[4], (pages, page, Hkv, hd), jnp.float32).astype(dtype)
+    table = jax.random.permutation(ks[0], pages)[:B * npp].reshape(B, npp)
+    table = table.astype(jnp.int32)
+    # ragged prefix lengths (incl. a partially-filled last page)
+    plens = jnp.array([1 + (7 * i + 5) % (npp * page) for i in range(B)],
+                      jnp.int32)
+    ref = prefix_prefill_ref(q, k, v, kp, vp, table, plens)
+    out = prefix_prefill(q, k, v, kp, vp, table, plens,
+                         block_q=32, block_kv=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+def test_prefix_prefill_ragged_suffix_and_full_pages():
+    """suffix_lens masking + prefix_lens exactly on page boundaries + a
+    trash-padded table slot beyond the live prefix."""
+    B, H, Hkv, Sq, hd, pages, page, npp = 2, 4, 2, 48, 64, 12, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, Sq, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, Sq, hd))
+    kp = jax.random.normal(ks[3], (pages, page, Hkv, hd))
+    vp = jax.random.normal(ks[4], (pages, page, Hkv, hd))
+    table = jnp.arange(B * npp, dtype=jnp.int32).reshape(B, npp)
+    # row 0: full pages; row 1: live prefix ends mid-table (pages beyond
+    # plen are trash-padded and must be masked, not attended)
+    table = table.at[1, 2:].set(0)
+    plens = jnp.array([npp * page, 2 * page], jnp.int32)
+    slens = jnp.array([Sq, Sq - 9], jnp.int32)
+    ref = prefix_prefill_ref(q, k, v, kp, vp, table, plens, slens)
+    out = prefix_prefill(q, k, v, kp, vp, table, plens, slens,
+                         block_q=16, block_kv=16, interpret=True)
+    np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)
+
+
+def test_prefix_prefill_matches_flash_with_dense_prefix():
+    """Cross-oracle: fused paged-prefix attention == flash attention over
+    the dense concat [prefix ++ suffix] with the offset causal mask."""
+    B, H, Hkv, Sq, hd, page, npp = 1, 4, 2, 32, 64, 8, 3
+    P = npp * page
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, Sq, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, Sq, hd))
+    kp = jax.random.normal(ks[3], (npp, page, Hkv, hd))
+    vp = jax.random.normal(ks[4], (npp, page, Hkv, hd))
+    table = jnp.arange(npp, dtype=jnp.int32)[None]
+    plens = jnp.array([P], jnp.int32)
+    out = prefix_prefill(q, k, v, kp, vp, table, plens,
+                         block_q=16, block_kv=16, interpret=True)
+    k_dense = jnp.concatenate(
+        [kp.reshape(1, P, Hkv, hd).transpose(0, 2, 1, 3), k], axis=2)
+    v_dense = jnp.concatenate(
+        [vp.reshape(1, P, Hkv, hd).transpose(0, 2, 1, 3), v], axis=2)
+    want = flash_prefill_ref(q, k_dense, v_dense, causal=True)
+    np.testing.assert_allclose(out, want, atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_insert_parity(dtype):
+    """Kernel splice == the dense .at[pidx, off].set oracle, including a
+    duplicate trash-page target (garbage by design, shapes must hold)."""
+    B, Hkv, hd, pages, page = 4, 2, 64, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    kp = jax.random.normal(ks[0], (pages, page, Hkv, hd), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[1], (pages, page, Hkv, hd), jnp.float32).astype(dtype)
+    kn = jax.random.normal(ks[2], (B, Hkv, hd))
+    vn = jax.random.normal(ks[3], (B, Hkv, hd))
+    pidx = jnp.array([3, 1, 7, 5], jnp.int32)
+    off = jnp.array([0, 7, 15, 3], jnp.int32)
+    rk, rv = paged_insert_ref(kp, vp, kn, vn, pidx, off)
+    ok, ov = paged_insert(kp, vp, kn, vn, pidx, off, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(ov), np.asarray(rv))
+    # untouched pages bit-identical to the originals
+    untouched = [p for p in range(pages) if p not in set(pidx.tolist())]
+    np.testing.assert_array_equal(np.asarray(ok)[untouched],
+                                  np.asarray(kp)[untouched])
 
 
 @pytest.mark.parametrize("shape", [

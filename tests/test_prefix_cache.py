@@ -302,6 +302,51 @@ def test_prefix_cache_survives_pool_pressure(params):
         assert r1[rid].tokens == r2[rid].tokens, rid
 
 
+def test_fused_prefix_tokens_match_dense_fallback(params):
+    """The fused prefix_prefill kernel path (default) and the dense
+    gather-then-flash fallback are the same math: a multi-turn shared
+    prefix trace must produce token-identical outputs with hits engaged
+    on both sides."""
+    fused = DisaggCluster(CFG, params, n_prefill=2, n_decode=2, max_batch=4,
+                          max_len=64, lm_tokens=48, prefix_cache=True)
+    dense = DisaggCluster(CFG, params, n_prefill=2, n_decode=2, max_batch=4,
+                          max_len=64, lm_tokens=48, prefix_cache=True,
+                          fused_prefix=False)
+    assert all(e.fused_prefix for e in fused.prefill)
+    assert not any(e.fused_prefix for e in dense.prefill)
+    r_f = fused.run(_shared_prefix_trace())
+    r_d = dense.run(_shared_prefix_trace())
+    assert set(r_f) == set(r_d)
+    for rid in r_f:
+        assert r_f[rid].tokens == r_d[rid].tokens, rid
+    # both really took the prefix path, not full recompute
+    assert sum(r.prefix_hit for r in r_f.values()) > 0
+    assert sum(r.prefix_hit for r in r_f.values()) == \
+        sum(r.prefix_hit for r in r_d.values())
+
+
+def test_jit_cache_bounded_by_pow2_buckets(params):
+    """Distinct prefix page counts must collapse onto O(log pages) jit
+    entries — unbounded per-length compilation is the failure mode this
+    pins (one compile per distinct prefix length in long-running
+    serving)."""
+    from repro.serving.engine import Engine
+    eng = Engine(CFG, params, max_batch=4, max_len=64, page_size=4,
+                 prefix_cache=True)
+    pps = 16                                    # 64 / 4 pages per sequence
+    assert eng._bucket_pages(0) == 0
+    for n in range(1, pps + 1):
+        b = eng._bucket_pages(n)
+        assert n <= b <= pps
+        assert b == pps or (b & (b - 1)) == 0   # pow2, capped at pps
+    # drive every distinct count through both compile caches
+    for n in range(1, pps + 1):
+        eng._get_gather_fn(eng._bucket_pages(n))
+        eng._get_fused_suffix_fn(16, eng._bucket_pages(n))
+    assert len(eng._gather_fn) <= 5             # {1, 2, 4, 8, 16}
+    assert len(eng._fused_fn) <= 5
+
+
 # ---------------- simulator vs live: prefix-hit routing -------------------
 
 def _multi_turn_trace():
