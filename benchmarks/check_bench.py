@@ -1,20 +1,41 @@
-"""Schema check for BENCH_<pr>.json perf-trajectory snapshots.
+"""Schema + regression check for BENCH_<pr>.json perf-trajectory snapshots.
 
-Usage: python -m benchmarks.check_bench BENCH_*.json
+Usage: python -m benchmarks.check_bench BENCH_*.json [--tol 0.10]
 
 Validates every file against the schema `benchmarks.run.bench_snapshot`
 writes: top-level keys, a known schema version, and non-empty headline
-sections with numeric `us_per_call` rows — so re-anchors can trust the
-trajectory files enough to diff them across PRs.
+sections with numeric `us_per_call` rows. Headline sections introduced
+by later PRs may be absent from older snapshots (a snapshot is checked
+against the section set of its own era, i.e. only pr >= current must
+carry them all).
+
+When given more than one file, the snapshots are sorted by PR number and
+consecutive pairs are diffed: a shared headline row whose `us_per_call`
+grows by more than the tolerance (default 10%), or whose
+`speedup`/`reduction` derived metric shrinks by more than it, fails the
+check.
+
+Snapshots are written by different sessions on different machines, so
+raw wall-clock is not comparable across them: us_per_call rows are
+compared only when both snapshots carry a `calib_us` machine-speed
+calibration (`benchmarks.run.calibrate`), scaled by the calibration
+ratio. Derived gain metrics are checked for `roofline.*` rows always
+(they are analytic, machine-independent) and for other rows only when
+the prior row's wall-clock is >= 1 ms (sub-ms ratios are timer noise).
+Wall-clock `.done` totals are exempt, and snapshots with mismatched
+`quick` flags are not diffed (different workload sizes).
 """
 from __future__ import annotations
 
 import json
 import sys
 
-from .run import BENCH_SCHEMA, HEADLINE
+from .run import BENCH_SCHEMA, HEADLINE, PR
 
 REQUIRED_TOP = ("schema", "pr", "quick", "headline")
+GAIN_KEYS = ("speedup", "reduction")    # derived metrics: higher is better
+MIN_US = 1000.0                         # ignore sub-ms rows (timer noise)
+DEFAULT_TOL = 0.10
 
 
 def check(path: str) -> list:
@@ -32,10 +53,19 @@ def check(path: str) -> list:
         errs.append(f"{path}: schema {data['schema']} != {BENCH_SCHEMA}")
     if not isinstance(data["pr"], int) or data["pr"] < 1:
         errs.append(f"{path}: bad pr number {data['pr']!r}")
+        return errs
+    calib = data.get("calib_us")
+    if data["pr"] >= PR and not (isinstance(calib, (int, float))
+                                 and calib > 0):
+        errs.append(f"{path}: missing machine calibration 'calib_us'")
     for sect in HEADLINE:
         rows = data["headline"].get(sect)
         if not rows:
-            errs.append(f"{path}: headline section '{sect}' empty/missing")
+            # sections added by later PRs are allowed to be absent from
+            # older snapshots; the current PR must carry them all
+            if data["pr"] >= PR or sect in data["headline"]:
+                errs.append(f"{path}: headline section '{sect}' "
+                            f"empty/missing")
             continue
         for name, row in rows.items():
             if not isinstance(row.get("us_per_call"), (int, float)):
@@ -43,15 +73,75 @@ def check(path: str) -> list:
     return errs
 
 
-def main(paths) -> int:
+def diff(prev, cur, tol: float = DEFAULT_TOL) -> list:
+    """Regressions of `cur` relative to `prev` on shared headline rows."""
+    errs = []
+    tag = f"PR{prev['pr']} -> PR{cur['pr']}"
+    if prev.get("quick") != cur.get("quick"):
+        return errs          # different workload sizes: nothing comparable
+    c0, c1 = prev.get("calib_us"), cur.get("calib_us")
+    # wall-clock rows are only comparable when both snapshots recorded the
+    # machine-speed calibration; scale prev's rows onto cur's machine
+    scale = (c1 / c0 if isinstance(c0, (int, float)) and c0 > 0
+             and isinstance(c1, (int, float)) else None)
+    for sect, rows in cur["headline"].items():
+        prows = prev["headline"].get(sect) or {}
+        for name, row in rows.items():
+            p = prows.get(name)
+            if p is None or name.endswith(".done"):
+                continue
+            us0, us1 = p.get("us_per_call"), row.get("us_per_call")
+            us_ok = (isinstance(us0, (int, float))
+                     and isinstance(us1, (int, float)))
+            if (scale is not None and us_ok and us0 >= MIN_US
+                    and us1 > us0 * scale * (1 + tol)):
+                errs.append(f"{tag}: {name} us_per_call regressed "
+                            f"{us0:.1f} -> {us1:.1f} "
+                            f"(+{us1 / (us0 * scale) - 1:.0%} "
+                            f"machine-adjusted)")
+            # analytic roofline ratios are machine-independent; measured
+            # ratios need a >= 1 ms base or they are timer noise
+            gate_gains = (name.startswith("roofline.")
+                          or (us_ok and us0 >= MIN_US))
+            if not gate_gains:
+                continue
+            for k in GAIN_KEYS:
+                g0, g1 = p.get(k), row.get(k)
+                if (isinstance(g0, (int, float))
+                        and isinstance(g1, (int, float))
+                        and g1 < g0 * (1 - tol)):
+                    errs.append(f"{tag}: {name} {k} regressed "
+                                f"{g0:.2f} -> {g1:.2f} "
+                                f"({g1 / g0 - 1:.0%})")
+    return errs
+
+
+def main(argv) -> int:
+    tol = DEFAULT_TOL
+    paths = []
+    it = iter(argv)
+    for a in it:
+        if a == "--tol":
+            tol = float(next(it, DEFAULT_TOL))
+        else:
+            paths.append(a)
     if not paths:
-        print("usage: python -m benchmarks.check_bench BENCH_*.json")
+        print("usage: python -m benchmarks.check_bench BENCH_*.json "
+              "[--tol 0.10]")
         return 2
     errs = [e for p in paths for e in check(p)]
+    if not errs and len(paths) > 1:
+        snaps = sorted((json.load(open(p)) for p in paths),
+                       key=lambda d: d["pr"])
+        for prev, cur in zip(snaps, snaps[1:]):
+            errs.extend(diff(prev, cur, tol))
     for e in errs:
         print(e)
     if not errs:
-        print(f"{len(paths)} bench snapshot(s) ok")
+        what = f"{len(paths)} bench snapshot(s) ok"
+        if len(paths) > 1:
+            what += f" (trajectory diff within {tol:.0%})"
+        print(what)
     return 1 if errs else 0
 
 

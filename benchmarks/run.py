@@ -14,8 +14,29 @@ import time
 import traceback
 
 BENCH_SCHEMA = 1
-PR = 6
-HEADLINE = ("roofline", "paged_kv", "prefix_cache", "serving_api")
+PR = 7
+HEADLINE = ("roofline", "paged_kv", "prefix_cache", "serving_api", "chunked")
+
+
+def calibrate(reps: int = 5) -> float:
+    """Fixed reference workload (us, best-of-N): numpy GEMM + python loop.
+
+    Snapshots are written by different sessions on differently-loaded
+    machines; raw wall-clock rows are not comparable across them. The
+    calibration row measures the machine itself, so `check_bench` can
+    scale one snapshot's rows to the other's machine before diffing.
+    """
+    import numpy as np
+    a = np.random.default_rng(0).standard_normal((384, 384))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        (a @ a).sum()
+        acc = 0
+        for i in range(200_000):
+            acc += i & 7
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def _parse_derived(derived: str):
@@ -34,7 +55,7 @@ def _parse_derived(derived: str):
 def bench_snapshot(rows, quick: bool):
     """Fold the emitted CSV rows into the BENCH_<pr>.json schema."""
     data = {"schema": BENCH_SCHEMA, "pr": PR, "quick": quick,
-            "headline": {k: {} for k in HEADLINE}}
+            "calib_us": calibrate(), "headline": {k: {} for k in HEADLINE}}
     for row in rows:
         name, us, derived = row.split(",", 2)
         sect = name.split(".")[0]
@@ -48,14 +69,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig4,fig8,fig9,fig11,fig12,"
-                         "table2,roofline,paged_kv,prefix_cache,serving_api")
+                         "table2,roofline,paged_kv,prefix_cache,serving_api,"
+                         "chunked")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--bench-out", default=f"BENCH_{PR}.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (fig1, fig2, fig4, fig8, fig11, fig12, paged_kv,
-                   prefix_cache, roofline, serving_api, table2)
+    from . import (chunked_prefill, fig1, fig2, fig4, fig8, fig11, fig12,
+                   paged_kv, prefix_cache, roofline, serving_api, table2)
     from .common import emit
 
     n_req = 150 if args.quick else 250
@@ -94,6 +116,9 @@ def main() -> None:
     if not only or "serving_api" in only:
         jobs.append(("serving_api",
                      lambda: serving_api.run(quick=args.quick)))
+    if not only or "chunked" in only:
+        jobs.append(("chunked",
+                     lambda: chunked_prefill.run(quick=args.quick)))
     if not only or "roofline" in only:
         jobs.append(("roofline", roofline.run))
 

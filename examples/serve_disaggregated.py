@@ -90,6 +90,33 @@ def streaming_quickstart(cfg, params):
     return res
 
 
+def chunked_demo(cfg, params):
+    """Chunked prefill: one long prompt no longer head-of-line-blocks the
+    short ones, and each finished chunk's KV streams to decode while later
+    chunks are still computing."""
+    reqs = [Request(0, 0.0, 120, 4),            # long prompt, many chunks
+            Request(1, 0.0, 18, 4), Request(2, 0.0, 40, 4)]
+
+    def go(chunk):
+        dc = DisaggCluster(cfg, params, n_prefill=1, n_decode=1,
+                           max_batch=4, max_len=256, paged=True,
+                           page_size=16, chunk_tokens=chunk, seed=0)
+        return dc, dc.run([Request(r.rid, r.arrive, r.in_len, r.out_len)
+                           for r in reqs])
+
+    base, res0 = go(None)
+    chnk, res1 = go(32)
+    identical = all(res1[r].tokens == res0[r].tokens for r in res0)
+    print(f"chunked      tokens_identical={identical}  "
+          f"prefill steps {base.prefill[0].steps} -> {chnk.prefill[0].steps} "
+          f"(long prompt chunk-interleaved with the short ones)")
+    print(f"  streaming: streamed_pulls={chnk.tx.streamed_pulls}  "
+          f"stream_saved_s={chnk.tx.stream_saved_s:.2e}  "
+          f"(smoke model is weight-bound; the short-prompt TTFT gain shows "
+          f"on real-scale models — benchmarks/chunked_prefill.py sim rows)")
+    assert identical, "chunked prefill must be token-identical"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b-smoke")
@@ -128,7 +155,10 @@ def main():
               f"inserted_pages={s.get('inserted_pages', 0):.0f} "
               f"evictions={s.get('evicted_pages', 0):.0f}")
 
-    # 4. failover drill: kill decode instance 1 at t=0.1s
+    # 4. chunked prefill: HOL relief + per-chunk streaming migration
+    chunked_demo(cfg, params)
+
+    # 5. failover drill: kill decode instance 1 at t=0.1s
     t = trace()
     ft = DisaggCluster(cfg, params, n_prefill=1, n_decode=2,
                        max_batch=4, max_len=96, lm_tokens=64)

@@ -70,6 +70,15 @@ class ParkedKV:
                                     # empirically calibrated transfer time)
 
 
+@dataclasses.dataclass
+class KVSegment:
+    """One chunk's worth of KV, ready to ship the moment its prefill chunk
+    finished (chunked prefill parks per chunk, not per request)."""
+    ready: float
+    nbytes: int
+    wire_s: Optional[float] = None  # override nbytes/bandwidth
+
+
 class TransferManager:
     """Parked KV on the prefill side + per-link wire-time model.
 
@@ -93,6 +102,11 @@ class TransferManager:
         self.times: List[float] = []
         self.peak_parked_bytes = 0
         self.cancelled_bytes = 0        # parked bytes dropped by cancel()
+        self.stream_saved_s = 0.0       # wire time hidden under later prefill
+                                        # chunks (vs park-at-prefill-done)
+        self.streamed_pulls = 0
+        self.partial: Dict[int, List[KVSegment]] = {}
+        self._granted: Dict[int, float] = {}
         self._link_free_at: Dict[Tuple[int, int], float] = {}
 
     def park(self, rid: int, blob: Any, nbytes: int, now: float, src: int = 0,
@@ -101,8 +115,43 @@ class TransferManager:
         self.peak_parked_bytes = max(self.peak_parked_bytes,
                                      self.parked_bytes())
 
+    def park_partial(self, rid: int, nbytes: int, now: float,
+                     wire_s: Optional[float] = None):
+        """Record one finished prefill chunk's KV as shippable from `now`.
+
+        Chunked prefill calls this once per chunk; the final `park` (with
+        the blob and the decode-side ship size) closes the stream and
+        `pull_streamed` charges the per-segment wire schedule."""
+        self.partial.setdefault(rid, []).append(
+            KVSegment(now, int(nbytes), wire_s))
+        self.peak_parked_bytes = max(self.peak_parked_bytes,
+                                     self.parked_bytes())
+
+    def grant(self, rid: int, now: float):
+        """Decode side reserved pages for a still-prefilling request: the
+        wire may start moving already-parked segments from `now` on, so the
+        stream's start floor is the grant time, not the final-park time."""
+        self._granted.setdefault(rid, now)
+
+    def has_parked(self, rid: int) -> bool:
+        """True once the final `park` closed the request's stream."""
+        return rid in self.parked
+
+    def drop_partial(self, rid: int) -> int:
+        """Forget a cancelled request's parked chunk segments (and any
+        grant). Returns the number of bytes dropped."""
+        segs = self.partial.pop(rid, None)
+        self._granted.pop(rid, None)
+        if not segs:
+            return 0
+        n = sum(s.nbytes for s in segs)
+        self.cancelled_bytes += n
+        return n
+
     def parked_bytes(self) -> int:
-        return sum(p.nbytes for p in self.parked.values())
+        return (sum(p.nbytes for p in self.parked.values())
+                + sum(s.nbytes for segs in self.partial.values()
+                      for s in segs))
 
     def cancel(self, rid: int) -> Optional[ParkedKV]:
         """Unpark a request whose transfer will never be pulled (request
@@ -110,6 +159,7 @@ class TransferManager:
         buffer is released, nothing crosses the wire. Returns the popped
         entry (truthy) so callers can release blob-held resources, or
         None if nothing was parked."""
+        self.drop_partial(rid)
         p = self.parked.pop(rid, None)
         if p is None:
             return None
@@ -147,4 +197,71 @@ class TransferManager:
         self.layer_overlap_s += dt * (self.n_layers - 1) / self.n_layers
         self.times.append(dt)
         t_first, t_full = layered_times(start, dt, self.n_layers)
+        return p.blob, t_first, t_full
+
+    def pull_streamed(self, rid: int, now: float,
+                      dst: int = 0) -> Tuple[Any, float, float]:
+        """Pull a request whose KV was parked chunk-by-chunk
+        (`park_partial`) while later prefill chunks were still computing.
+
+        Segments cross the (src, dst) link back-to-back in chunk order,
+        each no earlier than its prefill chunk finished (`ready`) and no
+        earlier than the decode side reserved pages (`grant`). The
+        decode-side prefix hit is trimmed off the *front* of the stream
+        (prefix pages ship first; the final `park`'s `nbytes` is the
+        authoritative ship size). Returns (blob, t_first, t_full) where
+        `t_first` is first-layer-of-last-chunk-landed — every earlier
+        chunk has fully landed by then, so decode may start attending —
+        and `t_full` is the last layer of the last chunk.
+
+        With no parked segments this degenerates to `pull_layered`'s
+        single-segment schedule."""
+        p = self.parked.pop(rid)
+        segs = self.partial.pop(rid, None)
+        granted = self._granted.pop(rid, None)
+        if not segs:
+            segs = [KVSegment(p.parked_at, p.nbytes, p.wire_s)]
+        # trim the decode-side hit off the front of the stream
+        trim = max(sum(s.nbytes for s in segs) - p.nbytes, 0)
+        keep: List[KVSegment] = []
+        for s in segs:
+            if trim >= s.nbytes:
+                trim -= s.nbytes
+                continue
+            if trim > 0:
+                frac = (s.nbytes - trim) / s.nbytes
+                w = s.wire_s * frac if s.wire_s is not None else None
+                keep.append(KVSegment(s.ready, s.nbytes - trim, w))
+                trim = 0
+            else:
+                keep.append(s)
+        link = (p.src, dst)
+        floor = max(granted if granted is not None else now,
+                    self._link_free_at.get(link, 0.0))
+        if not keep:
+            self._link_free_at[link] = floor
+            self.times.append(0.0)
+            return p.blob, floor, floor
+        t = floor
+        wire_total = 0.0
+        w_last = 0.0
+        for s in keep:
+            w = s.wire_s if s.wire_s is not None else s.nbytes / self.bandwidth
+            t = max(t, s.ready) + w
+            wire_total += w
+            w_last = w
+        t_full = t
+        t_first = t_full - w_last + w_last / self.n_layers
+        self._link_free_at[link] = t_full
+        nbytes = sum(s.nbytes for s in keep)
+        self.total_bytes += nbytes
+        self.total_chunks += sum(self.chunks_for(s.nbytes) for s in keep)
+        self.total_time += wire_total
+        self.layer_overlap_s += w_last * (self.n_layers - 1) / self.n_layers
+        self.times.append(wire_total)
+        # vs park-at-prefill-done (serial): start everything at the last
+        # chunk's ready time
+        last_ready = keep[-1].ready
+        self.stream_saved_s += max(last_ready + wire_total - t_full, 0.0)
+        self.streamed_pulls += 1
         return p.blob, t_first, t_full

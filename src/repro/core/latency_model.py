@@ -157,6 +157,45 @@ class LatencyModel:
         """Occupancy of one pipeline stage (admission interval under PP)."""
         return self.prefill_time(lens, par) / par.pp
 
+    def attn_flops_chunked(self, pairs: Sequence[Sequence[int]]) -> float:
+        """Score+PV flops for a chunked-prefill batch: each entry is
+        ``(new_tokens, ctx_tokens)`` — the chunk's queries attend over the
+        already-resident context plus themselves (causal within the
+        chunk). ``ctx = 0`` reduces to `attn_flops([new])`."""
+        c = self.cfg
+        if c.family == "ssm":
+            return 0.0
+        n_attn = c.num_layers + c.encoder_layers
+        if c.family == "hybrid":
+            n_attn = c.num_layers // max(c.hybrid_attn_every, 1)
+        total = 0.0
+        for new, ctx in pairs:
+            if c.sliding_window:
+                w = c.sliding_window
+                eff = new * min(ctx, w) + new * min(new, w) / 2
+            else:
+                eff = new * ctx + new * new / 2
+            total += 4 * c.q_dim * eff
+        return float(total) * n_attn
+
+    def prefill_chunk_time(self, pairs: Sequence[Sequence[int]],
+                           par: Parallelism) -> float:
+        """One chunked-prefill batch: entries are ``(new, ctx)`` pairs.
+        Linear (GEMM) work scales with the new tokens only; attention pays
+        the new-tokens-vs-context cross term, so the sum over a prompt's
+        chunks charges the same attention flops as one unchunked prefill
+        plus one batch overhead per chunk."""
+        t = float(sum(new for new, _ in pairs))
+        gemm = self.gemm_flops_per_token() * t
+        attn = self.attn_flops_chunked(pairs)
+        chip = self.chip
+        t_mm = self.c_mm * gemm / (par.tp * chip.peak_flops_bf16 * chip.mm_eff)
+        t_at = self.c_attn * attn / (par.tp * chip.peak_flops_bf16 * chip.attn_eff)
+        t_comm = self.tp_comm_time(t, par.tp)
+        t_weights = self.param_bytes() / par.tp / (chip.hbm_bw * chip.hbm_eff)
+        compute = max(t_mm + t_at + t_comm, t_weights)
+        return compute + self.c_over * chip.step_overhead
+
     def decode_time(self, batch: int, ctx_tokens: float, par: Parallelism) -> float:
         """One decode iteration for `batch` sequences, total cached tokens."""
         chip = self.chip

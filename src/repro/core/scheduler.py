@@ -57,7 +57,8 @@ class FCFSQueue(Generic[T]):
         return False
 
     def form_batch(self, budget: int, max_batch: Optional[int] = None,
-                   can_take: Optional[Callable[[T], bool]] = None) -> List[T]:
+                   can_take: Optional[Callable[[T], bool]] = None,
+                   chunk_tokens: Optional[int] = None) -> List[T]:
         """Paper §4.3: total new tokens per batch ~ L_m; oversized prompts
         go alone; FCFS order preserved (no reordering — convoy effects are
         accepted, preemption is future work per the paper).
@@ -65,22 +66,34 @@ class FCFSQueue(Generic[T]):
         `can_take` gates admission per item (e.g. KV-page availability);
         it is consulted exactly once per accepted item, in FCFS order, so
         stateful predicates that reserve capacity on True are safe.
+
+        With `chunk_tokens`, an item charges the batch budget only
+        ``min(token_of(item), chunk_tokens)`` — the caller runs at most one
+        chunk per item and re-pushes unfinished items (with a smaller
+        `token_of`), so a long prompt no longer monopolizes the batch.
         """
         if not self.items:
             return []
         if can_take is not None and not can_take(self.items[0]):
             return []
+
+        def charge(item: T) -> int:
+            t = self.token_of(item)
+            return min(t, chunk_tokens) if chunk_tokens else t
+
         batch = [self.items.pop(0)]
-        tok = self.token_of(batch[0])
-        while self.items and tok + self.token_of(self.items[0]) <= budget:
+        tok = charge(batch[0])
+        taken = self.token_of(batch[0])
+        while self.items and tok + charge(self.items[0]) <= budget:
             if max_batch and len(batch) >= max_batch:
                 break
             if can_take is not None and not can_take(self.items[0]):
                 break
             nxt = self.items.pop(0)
-            tok += self.token_of(nxt)
+            tok += charge(nxt)
+            taken += self.token_of(nxt)
             batch.append(nxt)
-        self._tokens -= tok
+        self._tokens -= taken
         return batch
 
 

@@ -175,6 +175,9 @@ class _DecodeInstance:
         self.running: List[Request] = []
         self.pending: List[Request] = []  # parked on prefill side, assigned
         self.arrived: List[Request] = []  # transferred, joins at iter start
+        # rid -> request: chunked-prefill streams whose residency (pages)
+        # is already allocated, waiting for the final chunk to land
+        self.granted: Dict[int, Request] = {}
         self.in_transfer = 0
         # rid -> last-layer-landed time for requests admitted while their
         # KV is still streaming layer-by-layer (consumed by the first
@@ -186,7 +189,7 @@ class _DecodeInstance:
     @property
     def load(self) -> int:
         return (len(self.running) + len(self.pending) + len(self.arrived)
-                + self.in_transfer)
+                + len(self.granted) + self.in_transfer)
 
     def charge_pages(self, r: Request) -> int:
         """Fresh pages a request needs: full residency minus the pages its
@@ -271,6 +274,7 @@ class SimDisaggBackend(_SimBackend):
                  dispatcher: Optional[DisaggDispatcher] = None,
                  phase: str = "both",
                  prefix_cache: Optional[bool] = None,
+                 chunk_tokens: Optional[int] = None,
                  horizon: float = 1e9,
                  tracker=None,
                  record_events: bool = True):
@@ -304,6 +308,20 @@ class SimDisaggBackend(_SimBackend):
         self.disp = dispatcher or DisaggDispatcher()
         self.tx = TransferManager(transfer_bw, page_bytes=int(page_bytes),
                                   n_layers=lm.cfg.num_layers)
+        # chunked prefill mirror: same chunk-splitting policy and charge
+        # structure as the live cluster (per-chunk `prefill_chunk_time`,
+        # per-chunk `park_partial`, streamed admission). Needs per-token
+        # KV (SSM state is constant-size; nothing to chunk-ship).
+        self.chunk_tokens = (chunk_tokens if chunk_tokens and per_tok > 0
+                             and phase != "decode" else None)
+        self._chunk_ctx: Dict[int, int] = {}    # rid -> tokens prefilled
+        self._sim_stream: Dict[int, int] = {}   # rid -> decode target
+        if self.chunk_tokens:
+            for p in self.P:
+                # queue load = tokens still to prefill (matches the live
+                # cluster's re-queue-with-remaining-suffix accounting)
+                p.queue.token_of = lambda r: max(
+                    r.in_len - self._chunk_ctx.get(r.rid, 0), 0)
         self.busy_prefill = 0.0
         self.busy_decode = 0.0
         self._breakdown = {"lm_tokens": lm_tok, "max_decode_batch": max_b,
@@ -331,6 +349,8 @@ class SimDisaggBackend(_SimBackend):
             self._try_start_prefill(payload, t)
         elif kind == "prefill_done":
             self._on_prefill_done(payload, t)
+        elif kind == "chunk_done":
+            self._on_chunk_done(payload, t)
         elif kind == "decode_poke":
             self._try_start_decode(payload, t)
         elif kind == "transfer_first":
@@ -359,6 +379,9 @@ class SimDisaggBackend(_SimBackend):
         self._ev.push(t, "prefill_poke", self.P[pi])
 
     def _try_start_prefill(self, p: _PrefillInstance, now: float):
+        if self.chunk_tokens:
+            self._chunk_step(p, now)
+            return
         while p.can_admit():
             start = max(now, p.next_admit)
             if start > now:
@@ -406,6 +429,122 @@ class SimDisaggBackend(_SimBackend):
             self._assign_decode(state, t, src=p.iid)
         self._try_start_prefill(p, t)
 
+    # -- chunked prefill (simulator twin of `_prefill_chunk_step`) -------
+    def _chunk_step(self, p: _PrefillInstance, now: float):
+        """One chunk of the head-of-queue prompt; unfinished prompts
+        re-queue at the tail. Chunk policy is byte-identical to the live
+        engine: non-final chunks round down to whole pages (>= 1 page) so
+        in-place page writes never straddle a partial page; the final
+        chunk takes the ragged tail."""
+        if p.inflight or not p.queue.items:
+            return
+        batch = p.queue.form_batch(p.budget, max_batch=1,
+                                   chunk_tokens=self.chunk_tokens)
+        if not batch:
+            return
+        r = batch[0]
+        state = self._states[r.rid]
+        state.to_status(RequestStatus.PREFILLING)
+        state.where = ("prefill_run", p)
+        ps = self.page_tokens
+        S = r.in_len
+        if r.rid not in self._chunk_ctx:        # first chunk: prefix match
+            r.prefill_start = now
+            if p.tree is not None and r.tokens is not None:
+                h, _ = p.tree.match(r.tokens)
+                h = min(h, ((S - 1) // ps) * ps)
+                r.prefix_hit = h
+                p.tree.insert(r.tokens[:(S // ps) * ps])
+            self._chunk_ctx[r.rid] = r.prefix_hit
+        ctx = self._chunk_ctx[r.rid]
+        c = min(self.chunk_tokens, S - ctx)
+        if ctx + c < S:
+            c = min(max((c // ps) * ps, ps), S - ctx)
+        T = self.lm.prefill_chunk_time([(c, ctx)], p.par)
+        p.inflight += 1
+        self._ev.push(now + T, "chunk_done", (p, r, T, ctx, c))
+
+    def _on_chunk_done(self, payload, t: float):
+        p, r, T, ctx, c = payload
+        p.inflight -= 1
+        self.busy_prefill += T
+        state = self._states[r.rid]
+        if state.done:                  # cancelled mid-chunk
+            self._drop_sim_stream(r, t)
+            self._chunk_ctx.pop(r.rid, None)
+            self._try_start_prefill(p, t)
+            return
+        done_tok = ctx + c
+        # park this chunk's KV as a shippable segment (same byte charge as
+        # the live cluster: prefill-resident KV delta, incl. the prefix
+        # hit — the decode-side skip is trimmed at pull time)
+        prev = state.progress
+        seg = kv_bytes(self.lm.cfg, done_tok, self.lm.dtype_bytes) - \
+            (kv_bytes(self.lm.cfg, prev, self.lm.dtype_bytes) if prev else 0)
+        self.tx.park_partial(r.rid, max(seg, 0), t)
+        state.progress = done_tok
+        self._chunk_ctx[r.rid] = done_tok
+        if done_tok < r.in_len:
+            p.queue.push(r)
+            state.where = ("prefill", p.iid)
+            if r.rid not in self._sim_stream:
+                # first chunk landed: pick the decode target now so the
+                # wire can overlap the remaining chunks' compute
+                self._predispatch_decode(state, t)
+        else:
+            r.first_token = t
+            self._emit_token(state, -1, t)
+            self._chunk_ctx.pop(r.rid, None)
+            if self.phase == "prefill":
+                self._drop_sim_stream(r, t)
+                self._finish_state(state, t)
+            elif r.rid in self._sim_stream:
+                self._finalize_stream(state, t, src=p.iid)
+            else:                       # single-chunk prompt
+                self._assign_decode(state, t, src=p.iid)
+        self._try_start_prefill(p, t)
+
+    def _predispatch_decode(self, state: RequestState, now: float):
+        r = state.request
+        d_hits = None
+        if self.prefix_on and r.tokens is not None:
+            d_hits = [d.tree.peek(r.tokens) for d in self.D]
+        di = self.disp.pick_decode(r.rid, [d.load for d in self.D],
+                                   hits=d_hits)
+        r.decode_hit = d_hits[di] if d_hits else 0
+        self._sim_stream[r.rid] = di
+        self.D[di].pending.append(r)
+        self._ev.push(now, "decode_poke", self.D[di])
+
+    def _finalize_stream(self, state: RequestState, now: float, src: int):
+        """Final chunk landed: close the stream with the decode-side ship
+        size; admission (or the earlier grant) pulls the per-segment
+        schedule."""
+        r = state.request
+        di = self._sim_stream.pop(r.rid)
+        ship = r.in_len - r.decode_hit
+        nbytes = kv_bytes(self.lm.cfg, ship, self.lm.dtype_bytes) \
+            if ship else 0.0
+        self.tx.park(r.rid, r, nbytes, now, src=src)
+        state.where = ("pending", di)
+        state.to_status(RequestStatus.MIGRATING)
+        self._ev.push(now, "decode_poke", self.D[di])
+
+    def _drop_sim_stream(self, r: Request, t: float):
+        """Remove every trace of a streamed chunked migration (cancel):
+        parked segments, the route, and the granted pages."""
+        self.tx.drop_partial(r.rid)
+        di = self._sim_stream.pop(r.rid, None)
+        if di is None:
+            return
+        d = self.D[di]
+        if r in d.pending:
+            d.pending.remove(r)
+        if r.rid in d.granted:
+            del d.granted[r.rid]
+            d.pool.free(r.rid)
+        self._ev.push(t, "decode_poke", d)
+
     def _assign_decode(self, state: RequestState, now: float, src: int):
         """Least-loaded decode dispatch + park on the prefill side."""
         r = state.request
@@ -436,30 +575,60 @@ class SimDisaggBackend(_SimBackend):
 
     def _try_admit(self, d: _DecodeInstance, now: float):
         """Pull-based admission: reserve pages, then pull over the link."""
+        if self.chunk_tokens:
+            # granted streams whose final chunk has landed pull first
+            # (their pages are already held; the wire has been moving
+            # since the grant)
+            progress = True
+            while progress:
+                progress = False
+                for rid, r in list(d.granted.items()):
+                    if self.tx.has_parked(rid):
+                        del d.granted[rid]
+                        self._start_pull(d, r, now)
+                        progress = True
+                        break
         while d.pending and d.can_admit(d.pending[0]):
             r = d.pending.pop(0)
-            state = self._states[r.rid]
             d.pool.alloc(r.rid, d.charge_pages(r))
-            d.in_transfer += 1
-            if d.tree is not None and r.tokens is not None:
-                d.tree.match(r.tokens)      # LRU bump, mirrors insert_kv
-                n_full = (r.in_len // self.page_tokens) * self.page_tokens
-                d.tree.insert(r.tokens[:n_full])
-            _, t_first, t_full = self.tx.pull_layered(r.rid, now, dst=d.iid)
-            state.where = ("transfer", d.iid)
-            # per-layer streaming: the request becomes joinable once the
-            # first layer lands; the last layer's arrival only gates the
-            # drain of the first iteration it joins (pipelined_finish)
-            self._ev.push(t_first, "transfer_first", (d, r, t_full))
+            if self.chunk_tokens and not self.tx.has_parked(r.rid):
+                # streamed chunked prefill still computing: grant its
+                # residency so parked segments start crossing now
+                self.tx.grant(r.rid, now)
+                d.granted[r.rid] = r
+                continue
+            self._start_pull(d, r, now)
         # blocked entries: amortized O(1) marking — entries only append at
         # the tail, so once we hit an already-marked one the rest are too
         # (goodput sweeps run deliberately overloaded; an O(pending) pass
-        # per decode event would go quadratic there)
+        # per decode event would go quadratic there); streamed entries
+        # stay PREFILLING-with-progress until their final chunk
         for r in reversed(d.pending):
             st = self._states[r.rid]
             if st.status is RequestStatus.PENDING_ADMIT:
                 break
-            st.to_status(RequestStatus.PENDING_ADMIT)
+            if st.status is RequestStatus.MIGRATING:
+                st.to_status(RequestStatus.PENDING_ADMIT)
+
+    def _start_pull(self, d: _DecodeInstance, r: Request, now: float):
+        """Start a request's wire transfer (pages already allocated)."""
+        state = self._states[r.rid]
+        d.in_transfer += 1
+        if d.tree is not None and r.tokens is not None:
+            d.tree.match(r.tokens)      # LRU bump, mirrors insert_kv
+            n_full = (r.in_len // self.page_tokens) * self.page_tokens
+            d.tree.insert(r.tokens[:n_full])
+        if self.chunk_tokens:
+            _, t_first, t_full = self.tx.pull_streamed(r.rid, now, dst=d.iid)
+        else:
+            _, t_first, t_full = self.tx.pull_layered(r.rid, now, dst=d.iid)
+        state.where = ("transfer", d.iid)
+        # per-layer streaming: the request becomes joinable once the
+        # first layer lands; the last layer's arrival only gates the
+        # drain of the first iteration it joins (pipelined_finish); a
+        # granted stream's wire may have finished during prefill, so the
+        # joinable time never precedes the pull
+        self._ev.push(max(t_first, now), "transfer_first", (d, r, t_full))
 
     def _on_transfer_first(self, payload, t: float):
         d, r, t_full = payload
@@ -544,15 +713,22 @@ class SimDisaggBackend(_SimBackend):
         if state.where is None:
             return
         stage, loc = state.where
-        if stage == "prefill":              # QUEUED in a prefill FCFS queue
+        if stage == "prefill":              # queued (incl. between chunks)
             self.P[loc].queue.remove(r)
-        elif stage == "prefill_run":        # in-flight prefill batch: the
-            pass                            # done handler drops it
+            if self.chunk_tokens:
+                self._drop_sim_stream(r, t)
+                self._chunk_ctx.pop(r.rid, None)
+                self._ev.push(t, "prefill_poke", self.P[loc])
+        elif stage == "prefill_run":        # in-flight prefill batch / chunk:
+            pass                            # the done handler drops it
         elif stage == "pending":            # parked, unassigned pages
             d = self.D[loc]
             if r in d.pending:
                 d.pending.remove(r)
-            self.tx.cancel(r.rid)
+            if r.rid in d.granted:          # finalized after a grant
+                del d.granted[r.rid]
+                d.pool.free(r.rid)
+            self.tx.cancel(r.rid)           # drops chunk segments too
             self._ev.push(t, "decode_poke", d)  # head may admit now
         elif stage == "transfer":           # on the wire: pages reserved
             d = self.D[loc]
@@ -583,6 +759,8 @@ class SimDisaggBackend(_SimBackend):
             "kv_chunks": self.tx.total_chunks,
             "kv_bytes": self.tx.total_bytes,
             "parked_bytes_peak": self.tx.peak_parked_bytes,
+            "kv_stream_saved_s": self.tx.stream_saved_s,
+            "streamed_pulls": self.tx.streamed_pulls,
             "decisions": self.disp.decisions,
             "states": dict(self._states),
             "breakdown": {"prefill_busy_s": self.busy_prefill,

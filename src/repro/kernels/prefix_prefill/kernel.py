@@ -94,10 +94,97 @@ def _kernel(tab_ref, plen_ref, slen_ref, q_ref, ks_ref, vs_ref,
         o_ref[0, 0] = (acc_ref[...] / den[:, None]).astype(o_ref.dtype)
 
 
+def _dbuf_kernel(tab_ref, plen_ref, slen_ref, q_ref, ks_ref, vs_ref,
+                 kp_ref, vp_ref, o_ref, m_ref, l_ref, acc_ref,
+                 k_buf, v_buf, sem, *, scale: float, softcap: float,
+                 page_size: int, block_q: int, block_kv: int,
+                 n_prefix_pages: int, groups: int):
+    """`_kernel` with the paged-prefix loads double-buffered by hand: the
+    pools stay in compiler-chosen (HBM) memory and page ik+1's async copy
+    is started before page ik's flash step runs, carried across the
+    sequential kv grid axis in two VMEM slots. Suffix KV keeps the regular
+    BlockSpec pipeline (it is dense and local to the batch row)."""
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+    npp = n_prefix_pages
+    hkv = h // groups
+
+    def dma(slot, i, buf, pool, ax):
+        return pltpu.make_async_copy(pool.at[tab_ref[b, i]],
+                                     buf.at[slot], sem.at[slot, ax])
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        dma(0, 0, k_buf, kp_ref, 0).start()
+        dma(0, 0, v_buf, vp_ref, 1).start()
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (bq, hd)
+
+    def _accum(k, v, mask):
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(ik < npp)
+    def _prefix():
+        slot = jax.lax.rem(ik, 2)
+        nxt = jax.lax.rem(ik + 1, 2)
+
+        @pl.when(ik + 1 < npp)
+        def _prefetch():
+            dma(nxt, ik + 1, k_buf, kp_ref, 0).start()
+            dma(nxt, ik + 1, v_buf, vp_ref, 1).start()
+
+        dma(slot, ik, k_buf, kp_ref, 0).wait()
+        dma(slot, ik, v_buf, vp_ref, 1).wait()
+        k = jax.lax.dynamic_index_in_dim(
+            k_buf[slot], hkv, axis=1, keepdims=False).astype(jnp.float32)
+        v = jax.lax.dynamic_index_in_dim(
+            v_buf[slot], hkv, axis=1, keepdims=False).astype(jnp.float32)
+        kpos = ik * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page_size), 1)
+        _accum(k, v, kpos < plen_ref[b])
+
+    @pl.when(ik >= npp)
+    def _suffix():
+        k = ks_ref[0, 0].astype(jnp.float32)
+        v = vs_ref[0, 0].astype(jnp.float32)
+        j = ik - npp
+        qpos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        kpos = j * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        _accum(k, v, (kpos <= qpos) & (kpos < slen_ref[b]))
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        den = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / den[:, None]).astype(o_ref.dtype)
+
+
 def prefix_prefill(q, k_suf, v_suf, k_pages, v_pages, prefix_table,
                    prefix_lens, suffix_lens=None, *, scale=None,
                    softcap: float = 0.0, block_q: int = 128,
-                   block_kv: int = 256, interpret: bool = False):
+                   block_kv: int = 256, dbuf: bool = False,
+                   interpret: bool = False):
     """q: (B, H, Sq, hd); k/v_suf: (B, Hkv, Sq, hd);
     k/v_pages: (num_pages, page, Hkv, hd); prefix_table: (B, npp) i32;
     prefix_lens: (B,) i32; suffix_lens: (B,) i32 or None -> (B, H, Sq, hd).
@@ -131,36 +218,53 @@ def prefix_prefill(q, k_suf, v_suf, k_pages, v_pages, prefix_table,
         (1, 1, block_kv, hd),
         lambda b, h, iq, ik, tab, pl_, sl: (
             b, h // G, jnp.clip(ik - npp, 0, nsk - 1), 0))
-    page_spec = pl.BlockSpec(
-        (1, page_size, 1, hd),
-        lambda b, h, iq, ik, tab, pl_, sl: (
-            tab[b, jnp.minimum(ik, npp - 1)], 0, h // G, 0))
+    q_spec = pl.BlockSpec(
+        (1, 1, block_q, hd),
+        lambda b, h, iq, ik, tab, pl_, sl: (b, h, iq, 0))
+    softmax_scratch = [
+        pltpu.VMEM((block_q,), jnp.float32),
+        pltpu.VMEM((block_q,), jnp.float32),
+        pltpu.VMEM((block_q, hd), jnp.float32),
+    ]
+    if dbuf:
+        any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        kern = functools.partial(_dbuf_kernel, scale=scale, softcap=softcap,
+                                 page_size=page_size, block_q=block_q,
+                                 block_kv=block_kv, n_prefix_pages=npp,
+                                 groups=G)
+        page_specs = [any_spec, any_spec]
+        extra_scratch = [
+            pltpu.VMEM((2, page_size, Hkv, hd), k_pages.dtype),
+            pltpu.VMEM((2, page_size, Hkv, hd), v_pages.dtype),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ]
+        # the manual DMA chain serializes the q-block walk too (slots are
+        # reused across grid steps), so only batch/head stay parallel
+        semantics = ("parallel", "parallel", "arbitrary", "arbitrary")
+    else:
+        kern = functools.partial(_kernel, scale=scale, softcap=softcap,
+                                 page_size=page_size, block_q=block_q,
+                                 block_kv=block_kv, n_prefix_pages=npp)
+        page_spec = pl.BlockSpec(
+            (1, page_size, 1, hd),
+            lambda b, h, iq, ik, tab, pl_, sl: (
+                tab[b, jnp.minimum(ik, npp - 1)], 0, h // G, 0))
+        page_specs = [page_spec, page_spec]
+        extra_scratch = []
+        semantics = ("parallel", "parallel", "parallel", "arbitrary")
     out = pl.pallas_call(
-        functools.partial(_kernel, scale=scale, softcap=softcap,
-                          page_size=page_size, block_q=block_q,
-                          block_kv=block_kv, n_prefix_pages=npp),
+        kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, block_q, hd),
-                             lambda b, h, iq, ik, tab, pl_, sl: (b, h, iq, 0)),
-                suf_spec, suf_spec, page_spec, page_spec,
-            ],
-            out_specs=pl.BlockSpec(
-                (1, 1, block_q, hd),
-                lambda b, h, iq, ik, tab, pl_, sl: (b, h, iq, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((block_q,), jnp.float32),
-                pltpu.VMEM((block_q,), jnp.float32),
-                pltpu.VMEM((block_q, hd), jnp.float32),
-            ],
+            in_specs=[q_spec, suf_spec, suf_spec, *page_specs],
+            out_specs=q_spec,
+            scratch_shapes=softmax_scratch + extra_scratch,
         ),
         out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, hd), q.dtype),
         interpret=interpret,
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
+            dimension_semantics=semantics),
     )(prefix_table, prefix_lens, suffix_lens, q, k_suf, v_suf,
       k_pages, v_pages)
     return out[:, :, :Sq]

@@ -20,11 +20,12 @@ def _on_tpu() -> bool:
 
 
 @partial(jax.jit, static_argnames=("scale", "softcap", "block_q",
-                                   "block_kv", "impl"))
+                                   "block_kv", "impl", "dbuf"))
 def prefix_prefill_op(q, k_suf, v_suf, k_pages, v_pages, prefix_table,
                       prefix_lens, suffix_lens=None, *, scale: float = None,
                       softcap: float = 0.0, block_q: int = 128,
-                      block_kv: int = 256, impl: str = "auto"):
+                      block_kv: int = 256, impl: str = "auto",
+                      dbuf: bool = False):
     """q: (B, S, H, hd); k/v_suf: (B, S, Hkv, hd);
     k/v_pages: (num_pages, page, Hkv, hd); prefix_table: (B, npp) i32;
     prefix_lens: (B,) i32; suffix_lens: (B,) i32 or None -> (B, S, H, hd).
@@ -42,6 +43,6 @@ def prefix_prefill_op(q, k_suf, v_suf, k_pages, v_pages, prefix_table,
         out = prefix_prefill(qt, kt, vt, k_pages, v_pages, prefix_table,
                              prefix_lens, suffix_lens, scale=scale,
                              softcap=softcap, block_q=block_q,
-                             block_kv=block_kv,
+                             block_kv=block_kv, dbuf=dbuf,
                              interpret=(impl == "interpret"))
     return out.transpose(0, 2, 1, 3)

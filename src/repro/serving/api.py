@@ -122,6 +122,9 @@ class RequestState:
     on_token: Optional[Callable[["RequestState", TokenEvent], None]] = None
     # backend-private routing bookkeeping (which queue/instance holds it)
     where: Any = None
+    # PREFILLING-with-progress: prompt tokens whose KV is already resident
+    # (chunked prefill updates this after every chunk)
+    progress: int = 0
 
     @property
     def rid(self) -> int:

@@ -97,11 +97,13 @@ class DisaggCluster(_LiveBackend):
                  prefix_cache: bool = False,
                  prefill_num_pages: Optional[int] = None,
                  fused_prefix: Optional[bool] = None,
+                 chunk_tokens: Optional[int] = None,
                  seed: int = 0, tracker=None):
         self._init_live(cfg, seed, tracker=tracker)
-        if prefix_cache and prefill_num_pages is None:
+        if (prefix_cache or chunk_tokens) and prefill_num_pages is None:
             # a prefill engine's default pool (one resident sequence) has
-            # no room to retain prefixes; keep a few sequences' worth
+            # no room to retain prefixes or to hold several chunked
+            # prompts' reserved residencies; keep a few sequences' worth
             prefill_num_pages = 8 * -(-max_len // page_size) + 1
         self.prefix_cache = prefix_cache
         self.prefill = [Engine(cfg, params, max_batch=1, max_len=max_len,
@@ -117,8 +119,14 @@ class DisaggCluster(_LiveBackend):
                               num_pages=decode_num_pages,
                               prefix_cache=prefix_cache)
                        for _ in range(n_decode)]
-        self.queues = [FCFSQueue(token_of=lambda s: len(s.tokens))
-                       for _ in range(n_prefill)]
+        # chunked prefill needs the paged runtime (in-place page writes)
+        self.chunk_tokens = (chunk_tokens if chunk_tokens
+                             and self.prefill[0].paged else None)
+        # queue load = tokens still to prefill (partial prompts re-queue
+        # with their remaining suffix only)
+        self.queues = [FCFSQueue(
+            token_of=lambda s: max(len(s.tokens) - s.prefilled, 0))
+            for _ in range(n_prefill)]
         self.dispatcher = DisaggDispatcher()
         self.tx = TransferManager(transfer_bandwidth,
                                   page_bytes=_page_bytes(cfg, page_size),
@@ -137,6 +145,13 @@ class DisaggCluster(_LiveBackend):
         # (state, skip_tokens, pinned_pages) awaiting decode admission
         self._d_pending: List[List[Tuple[RequestState, int, List[int]]]] = \
             [[] for _ in range(n_decode)]
+        # (state, skip, pinned, reserved_pages): streamed chunked prefills
+        # whose residency is granted, waiting for the final chunk to land
+        self._d_granted: List[List[Tuple[RequestState, int, List[int],
+                                         int]]] = [[] for _ in range(n_decode)]
+        # rid -> (decode_idx, src_prefill, skip): streamed-migration route
+        # chosen at first-chunk completion
+        self._stream: Dict[int, Tuple[int, int, int]] = {}
 
     # -- fault injection ------------------------------------------------
     def fail_decode(self, idx: int) -> List[int]:
@@ -159,6 +174,8 @@ class DisaggCluster(_LiveBackend):
         self._d_free = [0.0] * len(self.decode)
         self._d_active = [[] for _ in self.decode]
         self._d_pending = [[] for _ in self.decode]
+        self._d_granted = [[] for _ in self.decode]
+        self._stream = {}
 
     def _alive_p(self):
         return [i for i in range(len(self.prefill))
@@ -186,6 +203,10 @@ class DisaggCluster(_LiveBackend):
             self._poke_prefill(payload, t)
         elif kind == "dispatch_decode":
             self._on_dispatch_decode(payload, t)
+        elif kind == "predispatch_decode":
+            self._on_predispatch(payload, t)
+        elif kind == "finalize_stream":
+            self._on_finalize_stream(payload, t)
         elif kind == "poke_decode":
             self._poke_decode(payload, t)
         elif kind == "fail_decode":
@@ -209,6 +230,9 @@ class DisaggCluster(_LiveBackend):
         if self._p_free[i] > now:           # busy: come back when free
             self._ev.push(self._p_free[i], "poke_prefill", i)
             return
+        if self.chunk_tokens:
+            self._prefill_chunk_step(i, now)
+            return
         batch = self.queues[i].form_batch(self.lm_tokens, max_batch=1)
         for seq in batch:
             state = self._states[seq.rid]
@@ -228,6 +252,115 @@ class DisaggCluster(_LiveBackend):
             self._p_free[i] = now + dt
             self._ev.push(now + dt, "poke_prefill", i)
 
+    def _prefill_chunk_step(self, i: int, now: float):
+        """One chunk of the head-of-queue prompt. Unfinished prompts
+        re-queue at the tail (chunk-granular round-robin: a long prompt no
+        longer head-of-line-blocks short ones), each finished chunk's KV
+        is parked as a shippable segment, and the decode target is chosen
+        at *first*-chunk completion so the wire can overlap the remaining
+        chunks' compute."""
+        e = self.prefill[i]
+        batch = self.queues[i].form_batch(
+            self.lm_tokens, max_batch=1, can_take=e.can_start_chunked,
+            chunk_tokens=self.chunk_tokens)
+        if not batch:
+            return
+        seq = batch[0]
+        state = self._states[seq.rid]
+        req = state.request
+        state.to_status(RequestStatus.PREFILLING)
+        prev = seq.prefilled
+        done, first, blob, dt, _c = e.prefill_chunk(seq, self.chunk_tokens)
+        t_end = now + dt
+        state.progress = seq.prefilled
+        seg_bytes = kv_bytes(self.cfg, seq.prefilled) - \
+            (kv_bytes(self.cfg, prev) if prev else 0)
+        self.tx.park_partial(seq.rid, max(seg_bytes, 0), t_end)
+        if not done:
+            self.queues[i].push(seq)
+            if seq.rid not in self._stream:
+                self._ev.push(t_end, "predispatch_decode", (state, i))
+        else:
+            seq.append_token(first)
+            req.first_token = t_end
+            self._emit_token(state, first, t_end)
+            if seq.done:                    # out_len == 1 / instant stop
+                release_blob(blob)
+                self._drop_stream(state, t_end)
+                self.tx.drop_partial(seq.rid)
+                self._finish_state(state, t_end)
+            elif seq.rid in self._stream:
+                self._ev.push(t_end, "finalize_stream", (state, blob))
+            else:                           # single-chunk prompt
+                self._ev.push(t_end, "dispatch_decode", (state, blob, i))
+        self._p_free[i] = t_end
+        self._ev.push(t_end, "poke_prefill", i)
+
+    def _on_predispatch(self, payload, t: float):
+        """First chunk landed: pick the decode target now so segments can
+        be granted pages and start crossing the wire while later chunks
+        are still computing."""
+        state, src = payload
+        if state.done or state.rid in self._stream:
+            return
+        seq, req = state.seq, state.request
+        n_tok = len(seq.tokens)
+        alive = self._alive_d()
+        loads = [len(self._d_active[i]) + len(self._d_pending[i])
+                 + len(self._d_granted[i]) for i in range(len(self.decode))]
+        d_hits = None
+        if self.prefix_cache:
+            d_hits = [self.decode[i].prefix_peek(seq.tokens[:n_tok])
+                      for i in range(len(self.decode))]
+        di = self.dispatcher.pick_decode(req.rid, loads, alive, hits=d_hits)
+        skip, pinned = self.decode[di].pin_prefix(seq.tokens[:n_tok])
+        self._stream[state.rid] = (di, src, skip)
+        self._d_pending[di].append((state, skip, pinned))
+        self._ev.push(t, "poke_decode", di)
+
+    def _on_finalize_stream(self, payload, t: float):
+        """Final chunk landed: close the stream — park the page-backed
+        blob with the decode-side ship size; admission (or the earlier
+        grant) pulls the per-segment schedule."""
+        state, blob = payload
+        if state.done:                      # cancelled mid-final-chunk
+            release_blob(blob)
+            self.tx.drop_partial(state.rid)
+            return
+        di, src, skip = self._stream.pop(state.rid)
+        seq = state.seq
+        ship = blob.n_tok - skip
+        nbytes = kv_bytes(self.cfg, ship) if ship else 0
+        self.tx.park(seq.rid, blob, nbytes, t, src=src)
+        state.where = ("decode", di)
+        state.to_status(RequestStatus.MIGRATING)
+        self._ev.push(t, "poke_decode", di)
+
+    def _drop_stream(self, state: RequestState, t: float):
+        """Remove every trace of a streamed chunked migration: the chosen
+        route, the pending/granted decode-side entry (pins + page
+        reservation), and the parked chunk segments."""
+        rid = state.rid
+        self.tx.drop_partial(rid)
+        info = self._stream.pop(rid, None)
+        if info is None:
+            return
+        di, _src, _skip = info
+        d = self.decode[di]
+        for j, entry in enumerate(self._d_pending[di]):
+            if entry[0] is state:
+                del self._d_pending[di][j]
+                d.unpin(entry[2])
+                break
+        for j, entry in enumerate(self._d_granted[di]):
+            if entry[0] is state:
+                del self._d_granted[di][j]
+                d.unpin(entry[2])
+                if di not in self.failed_decode:
+                    d.unreserve(entry[3])
+                break
+        self._ev.push(t, "poke_decode", di)
+
     def _on_dispatch_decode(self, payload, t: float):
         state, blob, src = payload
         if state.done:                      # cancelled mid-prefill: the
@@ -236,7 +369,7 @@ class DisaggCluster(_LiveBackend):
         seq, req = state.seq, state.request
         alive = self._alive_d()
         loads = [len(self._d_active[i]) + len(self._d_pending[i])
-                 for i in range(len(self.decode))]
+                 + len(self._d_granted[i]) for i in range(len(self.decode))]
         n_tok = blob[1]
         d_hits = None
         if self.prefix_cache:
@@ -253,6 +386,37 @@ class DisaggCluster(_LiveBackend):
         state.to_status(RequestStatus.MIGRATING)
         self._ev.push(t, "poke_decode", di)
 
+    def _admit_one(self, i: int, state: RequestState, skip: int,
+                   pinned: List[int], now: float):
+        """Pull one parked request's KV over the wire and splice it in.
+        `pull_streamed` charges the per-segment schedule for chunked
+        streams and degenerates to the per-layer schedule for whole-blob
+        parks."""
+        d = self.decode[i]
+        seq, req = state.seq, state.request
+        src = self.tx.parked[seq.rid].src
+        blob, t_first, t_full = self.tx.pull_streamed(seq.rid, now, dst=i)
+        if isinstance(blob, KVBlob):
+            # page-backed blob: the prefill engine stitches the wire
+            # payload from its page pool (and drops its pins)
+            wire = blob.owner.materialize_wire(blob, skip)
+        else:
+            wire = _slice_blob(blob, skip)
+        d.insert_kv(seq, wire, shared=pinned, skip_tokens=skip)
+        d.unpin(pinned)
+        # per-layer streaming: decode starts attending once the first
+        # layer of the last chunk lands, not at blob-complete
+        seq.kv_first = max(now, t_first)
+        seq.kv_full = t_full
+        req.decode_admit = seq.kv_first
+        req.transfer_done = t_full
+        state.to_status(RequestStatus.DECODING)
+        self._d_active[i].append(seq)
+        # the pull released prefill-side pages: a stalled chunked prefill
+        # may be able to start its next prompt now
+        if src < len(self.prefill):
+            self._ev.push(now, "poke_prefill", src)
+
     def _poke_decode(self, i: int, now: float):
         if i in self.failed_decode:
             return
@@ -261,36 +425,41 @@ class DisaggCluster(_LiveBackend):
             return
         d = self.decode[i]
         pending = self._d_pending[i]
+        granted = self._d_granted[i]
 
         # pull-based admission against free KV pages (paper §4.3);
         # shared prefix pages are already resident, so only the
         # suffix needs fresh pages
         def admit_ready():
-            while pending and d.can_admit(pending[0][0].seq,
-                                          len(pending[0][2])):
-                state, skip, pinned = pending.pop(0)
-                seq, req = state.seq, state.request
-                blob, t_first, t_full = self.tx.pull_layered(seq.rid, now,
-                                                             dst=i)
-                if isinstance(blob, KVBlob):
-                    # fused-prefix blob: the prefill engine stitches the
-                    # wire payload from its page pool (and drops its pins)
-                    wire = blob.owner.materialize_wire(blob, skip)
-                else:
-                    wire = _slice_blob(blob, skip)
-                d.insert_kv(seq, wire, shared=pinned, skip_tokens=skip)
-                d.unpin(pinned)
-                # per-layer streaming: decode starts attending once the
-                # first layer's pages land, not at blob-complete
-                seq.kv_first = max(now, t_first)
-                seq.kv_full = t_full
-                req.decode_admit = seq.kv_first
-                req.transfer_done = t_full
-                state.to_status(RequestStatus.DECODING)
-                self._d_active[i].append(seq)
+            # granted streams whose final chunk has landed insert first
+            # (their pages are already held; the wire has been moving
+            # since the grant)
+            progress = True
+            while progress:
+                progress = False
+                for j, (state, skip, pinned, n_res) in enumerate(granted):
+                    if self.tx.has_parked(state.rid):
+                        del granted[j]
+                        d.unreserve(n_res)
+                        self._admit_one(i, state, skip, pinned, now)
+                        progress = True
+                        break
+            while pending:
+                state, skip, pinned = pending[0]
+                if not d.can_admit(state.seq, len(pinned)):
+                    break
+                pending.pop(0)
+                if not self.tx.has_parked(state.rid):
+                    # streamed chunked prefill still computing: grant its
+                    # residency so parked segments start crossing now
+                    n_res = d.reserve_for(state.seq, len(pinned))
+                    self.tx.grant(state.rid, now)
+                    granted.append((state, skip, pinned, n_res))
+                    continue
+                self._admit_one(i, state, skip, pinned, now)
 
         admit_ready()
-        if pending and not self._d_active[i]:
+        if pending and not self._d_active[i] and not granted:
             # liveness fallback: nothing is running (so no future poke
             # will fire) and the head still can't admit — its eviction
             # is blocked by pages pinned for *later* pending requests.
@@ -302,11 +471,13 @@ class DisaggCluster(_LiveBackend):
                 pending[j] = (state, 0, [])
             admit_ready()
         # amortized marking: entries append at the tail, marked ones
-        # accumulate at the front (see the simulator twin)
+        # accumulate at the front (see the simulator twin); streamed
+        # entries stay PREFILLING-with-progress until their final chunk
         for state, _skip, _pinned in reversed(pending):
             if state.status is RequestStatus.PENDING_ADMIT:
                 break
-            state.to_status(RequestStatus.PENDING_ADMIT)
+            if state.status is RequestStatus.MIGRATING:
+                state.to_status(RequestStatus.PENDING_ADMIT)
         d._active = self._d_active[i]
         if not self._d_active[i]:
             return
@@ -357,13 +528,23 @@ class DisaggCluster(_LiveBackend):
         self._d_active[idx] = []
         # also re-route ready-but-unpulled requests (drop the dead
         # instance's prefix pin; the new target re-pins its own)
-        moved = self._d_pending[idx]
+        moved = [(st, pinned) for st, _skip, pinned in self._d_pending[idx]]
+        moved += [(st, pinned) for st, _skip, pinned, _n
+                  in self._d_granted[idx]]
         self._d_pending[idx] = []
-        for state, _skip, pinned in moved:
+        self._d_granted[idx] = []
+        for state, pinned in moved:
             self.decode[idx].unpin(pinned)
-            parked = self.tx.parked.pop(state.rid)
-            self._ev.push(t, "dispatch_decode",
-                          (state, parked.blob, parked.src))
+            if self.tx.has_parked(state.rid):
+                parked = self.tx.parked.pop(state.rid)
+                self.tx._granted.pop(state.rid, None)
+                self._ev.push(t, "dispatch_decode",
+                              (state, parked.blob, parked.src))
+            else:
+                # streamed chunked prefill mid-flight: re-route the stream
+                _di, src, _skip = self._stream.pop(state.rid)
+                self.tx._granted.pop(state.rid, None)
+                self._ev.push(t, "predispatch_decode", (state, src))
 
     # -- cancellation ----------------------------------------------------
     def _do_cancel(self, state: RequestState, t: float):
@@ -376,6 +557,15 @@ class DisaggCluster(_LiveBackend):
         if state.status is RequestStatus.QUEUED and state.where is not None:
             _, qi = state.where
             self.queues[qi].remove(seq)
+        elif state.status is RequestStatus.PREFILLING \
+                and state.where is not None:
+            # chunked prefill: the request may sit re-queued between
+            # chunks with a reserved residency and a predispatched stream
+            _, qi = state.where
+            self.queues[qi].remove(seq)
+            self.prefill[qi].abort_partial(seq)
+            self._drop_stream(state, t)
+            self._ev.push(t, "poke_prefill", qi)
         elif state.status in (RequestStatus.MIGRATING,
                               RequestStatus.PENDING_ADMIT):
             _, di = state.where
@@ -385,9 +575,18 @@ class DisaggCluster(_LiveBackend):
                     del pending[j]
                     self.decode[di].cancel(seq, pinned)
                     break
-            p = self.tx.cancel(state.rid)
+            for j, (st, _skip, pinned, n_res) in \
+                    enumerate(self._d_granted[di]):
+                if st is state:
+                    del self._d_granted[di][j]
+                    self.decode[di].unreserve(n_res)
+                    self.decode[di].cancel(seq, pinned)
+                    break
+            p = self.tx.cancel(state.rid)   # drops chunk segments too
             if p is not None:
                 release_blob(p.blob)        # drop prefill-side prefix pins
+                if p.src < len(self.prefill):
+                    self._ev.push(t, "poke_prefill", p.src)
             self._ev.push(t, "poke_decode", di)  # head may admit now
         elif state.status is RequestStatus.DECODING:
             _, di = state.where

@@ -67,6 +67,17 @@ def release_blob(blob):
 
 
 @dataclasses.dataclass
+class PartialPrefill:
+    """Resumable chunked-prefill state: the prompt's full block table is
+    reserved at chunk 0; `done` tracks how many prompt tokens have KV
+    resident in pool pages (cached prefix included)."""
+    table: List[int]
+    hit: int                    # cached-prefix tokens (page-aligned)
+    done: int                   # resident prompt tokens (>= hit)
+    chunks: int = 0             # chunks computed so far
+
+
+@dataclasses.dataclass
 class Sequence:
     rid: int
     tokens: List[int]
@@ -74,6 +85,7 @@ class Sequence:
     slot: int = -1
     produced: int = 0
     done: bool = False
+    prefilled: int = 0          # resident prompt tokens (chunked prefill)
     prefix_hit: int = 0         # prefill-side cached-prefix tokens
     decode_hit: int = 0         # decode-side shared-prefix tokens
     kv_first: float = 0.0       # when the first layer's KV landed (stream)
@@ -147,6 +159,7 @@ class Engine:
         self.fused_prefix = (self.prefix_caching if fused_prefix is None
                              else bool(fused_prefix and self.prefix_caching))
         self._cache = self._empty_cache()
+        self._partial: Dict[int, PartialPrefill] = {}
         self._slot_free = list(range(max_batch))
         self._prefill_fn: Dict[int, Any] = {}
         self._suffix_fn: Dict[Tuple[int, int], Any] = {}
@@ -339,6 +352,20 @@ class Engine:
             self.prefix_cache.evict(need - self._kv.free_pages)
         return self._kv.can_admit(self.tokens_needed(seq), n_shared_pages)
 
+    def reserve_for(self, seq: Sequence, n_shared: int = 0) -> int:
+        """Hold the sequence's full residency ahead of its insert
+        (streamed chunked admission: the grant lets the wire start while
+        prefill is still computing). Returns the page count for
+        `unreserve`; the later `insert_kv` allocates the same residency
+        the reservation covered."""
+        n = max(self._kv.pages_for(self.tokens_needed(seq)) - n_shared, 0)
+        self._kv.reserve(n)
+        return n
+
+    def unreserve(self, n_pages: int):
+        if n_pages:
+            self._kv.unreserve(n_pages)
+
     # ---- prefix-cache surface ------------------------------------------
     def prefix_peek(self, tokens) -> int:
         """Routing probe: longest cached prefix (tokens), no LRU bump."""
@@ -362,6 +389,46 @@ class Engine:
     def _bucket(self, n: int) -> int:
         b = next((b for b in _BUCKETS if n <= b), n)
         return min(max(b, n), self.max_len)
+
+    def _forward_chunk(self, padded, ctx_pages: List[int], ctx_len: int,
+                       last_pos: int, fused: bool):
+        """One bounded prefill pass, shared by the whole-prompt prefix path
+        and the chunked state machine: `padded` right-padded tokens attend
+        over `ctx_len` tokens resident in `ctx_pages` (empty -> plain
+        prefill) plus themselves under the offset causal mask. `last_pos`
+        is the last *real* (unpadded) query position — `logits[0, 0]` is
+        that row, the one first-token sampling must read. Returns
+        (logits, cache, prefix_kv); `prefix_kv` is the dense gather, only
+        on the non-fused fallback (callers stitch blobs from it)."""
+        bucket = padded.shape[1]
+        if not ctx_len:
+            fn = self._get_prefill_fn(bucket)
+            logits, cache = fn(self.params, jnp.asarray(padded),
+                               jnp.asarray(last_pos, jnp.int32))
+            return logits, cache, None
+        npb = self._bucket_pages(len(ctx_pages))
+        if fused:
+            # fused hot path: queries attend over the context pages in
+            # place (prefix_prefill kernel) — no dense gather at all
+            table = self._padded_page_ids(ctx_pages, npb)[None]
+            pools = {k: v for k, v in self._cache.items()
+                     if k.startswith("seg")}
+            fn = self._get_fused_suffix_fn(bucket, npb)
+            logits, cache = fn(self.params, jnp.asarray(padded), pools,
+                               table, jnp.asarray(ctx_len, jnp.int32),
+                               jnp.asarray(ctx_len, jnp.int32),
+                               jnp.asarray(last_pos, jnp.int32))
+            return logits, cache, None
+        # flagged fallback: dense gather padded to the page bucket, with
+        # the padding masked out by plen
+        prefix_kv = self._get_gather_fn(npb)(
+            self._cache, self._padded_page_ids(ctx_pages, npb))
+        fn = self._get_suffix_prefill_fn(bucket, npb)
+        logits, cache = fn(self.params, jnp.asarray(padded), prefix_kv,
+                           jnp.asarray(ctx_len, jnp.int32),
+                           jnp.asarray(ctx_len, jnp.int32),
+                           jnp.asarray(last_pos, jnp.int32))
+        return logits, cache, prefix_kv
 
     def prefill_request(self, seq: Sequence) -> Tuple[int, Any, float]:
         """Run prefill; returns (first_token, kv_blob, step_time).
@@ -412,35 +479,9 @@ class Engine:
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :Ssuf] = suffix
         t0 = time.perf_counter()
-        prefix_kv = None
         fused = bool(hit and self.fused_prefix)
-        if fused:
-            # fused hot path: suffix queries attend over the prefix pages
-            # in place (prefix_prefill kernel) — no dense gather at all
-            npb = self._bucket_pages(len(hit_pages))
-            table = self._padded_page_ids(hit_pages, npb)[None]
-            pools = {k: v for k, v in self._cache.items()
-                     if k.startswith("seg")}
-            fn = self._get_fused_suffix_fn(bucket, npb)
-            logits, cache = fn(self.params, jnp.asarray(padded), pools,
-                               table, jnp.asarray(hit, jnp.int32),
-                               jnp.asarray(hit, jnp.int32),
-                               jnp.asarray(Ssuf - 1, jnp.int32))
-        elif hit:
-            # flagged fallback: dense gather padded to the page bucket,
-            # with the padding masked out by plen
-            npb = self._bucket_pages(len(hit_pages))
-            prefix_kv = self._get_gather_fn(npb)(
-                self._cache, self._padded_page_ids(hit_pages, npb))
-            fn = self._get_suffix_prefill_fn(bucket, npb)
-            logits, cache = fn(self.params, jnp.asarray(padded), prefix_kv,
-                               jnp.asarray(hit, jnp.int32),
-                               jnp.asarray(hit, jnp.int32),
-                               jnp.asarray(Ssuf - 1, jnp.int32))
-        else:
-            fn = self._get_prefill_fn(bucket)
-            logits, cache = fn(self.params, jnp.asarray(padded),
-                               jnp.asarray(Ssuf - 1, jnp.int32))
+        logits, cache, prefix_kv = self._forward_chunk(
+            padded, hit_pages, hit, Ssuf - 1, fused)
         first = self._sample_token(seq, logits[0, 0])
 
         # the migration blob: on the fused path it carries only the suffix
@@ -496,6 +537,116 @@ class Engine:
             self._kv.release(hit_pages)     # unpin
         return first, (blob_cache, S), dt
 
+    # ---- chunked prefill (incremental state machine) --------------------
+    def can_start_chunked(self, seq: Sequence) -> bool:
+        """Admission gate for starting a chunked prefill: the *whole*
+        prompt's pages are reserved at chunk 0 (minus the cached prefix),
+        so later chunks never deadlock on pool space. Already-started
+        sequences always resume."""
+        if seq.rid in self._partial:
+            return True
+        S = len(seq.tokens)
+        ps = self._kv.page_size
+        hit = min(self.prefix_peek(seq.tokens), ((S - 1) // ps) * ps)
+        need = -(-S // ps) - hit // ps
+        if need > self._kv.free_pages and self.prefix_caching:
+            self.prefix_cache.evict(need - self._kv.free_pages)
+        return need <= self._kv.free_pages
+
+    def prefill_chunk(self, seq: Sequence,
+                      chunk_tokens: int) -> Tuple[bool, Optional[int],
+                                                  Any, float, int]:
+        """Run (at most) one more chunk of the sequence's prefill.
+
+        Chunk k's queries attend over chunks 0..k-1's KV resident in pool
+        pages through the fused `prefix_prefill` kernel (same offset
+        causal mask as the prefix-cache path), and the chunk's fresh KV is
+        written *directly into pool pages* — no dense per-request blob is
+        ever materialized on this path. Non-final chunks are rounded down
+        to whole pages (>= 1 page) so the next chunk's page writes never
+        clobber a partially-filled page; the final chunk takes the ragged
+        tail. Returns ``(done, first_token, blob, dt, new_tokens)`` —
+        `first_token`/`blob` are None until the final chunk, where the
+        blob is fully page-backed (`prefix_tokens == n_tok`, pages pinned
+        until `materialize_wire`/`release_blob`)."""
+        assert self.paged, "chunked prefill needs the paged runtime"
+        toks = np.asarray(seq.tokens, np.int32)
+        S = len(toks)
+        assert S < self.max_len, (S, self.max_len)
+        ps = self._kv.page_size
+        t0 = time.perf_counter()
+        st = self._partial.get(seq.rid)
+        if st is None:
+            token_list = [int(t) for t in toks]
+            hit, hit_pages = (self.prefix_cache.match(token_list)
+                              if self.prefix_caching else (0, []))
+            # keep >= 1 suffix token: the first output needs its logits
+            hit = min(hit, ((S - 1) // ps) * ps)
+            hit_pages = hit_pages[:hit // ps]
+            if hit_pages:
+                self._kv.acquire(hit_pages)  # pin across eviction
+            need = -(-S // ps) - len(hit_pages)
+            if need > self._kv.free_pages and self.prefix_caching:
+                self.prefix_cache.evict(need - self._kv.free_pages)
+            table = self._kv.alloc(seq.rid, S, shared=hit_pages)
+            if hit_pages:
+                self._kv.release(hit_pages)  # table refs hold them now
+            st = PartialPrefill(list(table), hit, hit)
+            self._partial[seq.rid] = st
+        ctx = st.done
+        c = min(chunk_tokens, S - ctx)
+        if ctx + c < S:
+            # non-final chunks end on a page boundary
+            c = min(max((c // ps) * ps, ps), S - ctx)
+        final = ctx + c == S
+        padded = np.zeros((1, self._bucket(c)), np.int32)
+        padded[0, :c] = toks[ctx:ctx + c]
+        fused = self.fused_prefix if self.prefix_caching else True
+        logits, cache, _ = self._forward_chunk(
+            padded, st.table[:ctx // ps], ctx, c - 1, fused)
+        first = self._sample_token(seq, logits[0, 0]) if final else None
+        # in-place paged write of the chunk's fresh KV
+        first_page = ctx // ps
+        n_chunk_pages = -(-(ctx + c) // ps) - first_page
+        segs = {k: v for k, v in cache.items() if k.startswith("seg")}
+        src_len = next(iter(segs.values()))["k"].shape[2]
+        self._cache = self._get_page_write_fn(n_chunk_pages, src_len)(
+            self._cache, segs,
+            jnp.asarray(st.table[first_page:first_page + n_chunk_pages],
+                        jnp.int32))
+        jax.block_until_ready(self._cache)
+        dt = time.perf_counter() - t0
+        self.clock += dt
+        self.steps += 1
+        self.prefill_tokens += c
+        st.done = ctx + c
+        st.chunks += 1
+        seq.prefilled = st.done
+        if not final:
+            return False, None, None, dt, c
+        # close out: the blob is the page set itself — pin every page,
+        # publish the full-page prefix in the radix tree, drop the table
+        self._kv.acquire(st.table)
+        if self.prefix_caching:
+            self.prefix_cache.insert([int(t) for t in toks[:(S // ps) * ps]],
+                                     st.table[:S // ps])
+        self._kv.free(seq.rid)              # blob pins + tree refs remain
+        blob = KVBlob({}, S, prefix_tokens=S,
+                      prefix_pages=list(st.table), owner=self)
+        del self._partial[seq.rid]
+        self.prefix_hit_tokens += st.hit
+        seq.prefix_hit = st.hit
+        return True, first, blob, dt, c
+
+    def abort_partial(self, seq: Sequence):
+        """Cancel a mid-chunk prefill without leaking: drop the resumable
+        state and release the whole reserved residency (shared head pages
+        survive through their tree references)."""
+        st = self._partial.pop(seq.rid, None)
+        if st is not None:
+            self._kv.free(seq.rid)
+            seq.prefilled = 0
+
     def materialize_wire(self, blob, skip_tokens: int = 0):
         """Stitch the wire payload actually shipped to the decode side.
 
@@ -523,11 +674,17 @@ class Engine:
             npb = self._bucket_pages(len(ship_pages))
             pk = self._get_gather_fn(npb)(
                 self._cache, self._padded_page_ids(ship_pages, npb))
-            span = len(ship_pages) * ps
-            for name, seg in blob.cache.items():
-                out[name] = {p: jnp.concatenate(
-                    [pk[name][p][:, :, :span], seg[p][:, :, :Ssuf]], axis=2)
-                    for p in ("k", "v")}
+            # the paged span may end ragged (chunked blobs carry the whole
+            # prompt in pages, incl. an un-page-aligned tail)
+            span = hit - skip_tokens
+            for name in pk:
+                pieces = {p: [pk[name][p][:, :, :span]] for p in ("k", "v")}
+                if name in blob.cache:      # fused path: fresh suffix KV
+                    for p in ("k", "v"):
+                        pieces[p].append(blob.cache[name][p][:, :, :Ssuf])
+                out[name] = {p: (pieces[p][0] if len(pieces[p]) == 1 else
+                                 jnp.concatenate(pieces[p], axis=2))
+                             for p in ("k", "v")}
         else:
             cut = skip_tokens - hit
             for name, seg in blob.cache.items():
@@ -671,6 +828,8 @@ class Engine:
         engine (both paths no-op on nothing-held)."""
         if pinned:
             self.unpin(list(pinned))
+        if self.paged:
+            self.abort_partial(seq)
         self.release(seq)
 
     def _sample_token(self, seq: Sequence, logits_row) -> int:

@@ -69,11 +69,29 @@ class KVCacheManager:
         self._refcnt: Dict[int, int] = {}        # page id -> count (> 0)
         self._tables: Dict[int, List[int]] = {}
         self.peak_used = 0
+        self._reserved = 0                       # streaming-admission holds
 
     # ---- capacity ----------------------------------------------------
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return len(self._free) - self._reserved
+
+    # ---- reservations -------------------------------------------------
+    def reserve(self, n_pages: int):
+        """Hold `n_pages` off the admission signal without naming page ids
+        (streamed chunked-prefill admission: decode grants a still-
+        prefilling request its residency so the wire can start early; the
+        actual `alloc` happens at insert time, after `unreserve`)."""
+        assert 0 <= n_pages <= self.free_pages, (n_pages, self.free_pages)
+        self._reserved += n_pages
+
+    def unreserve(self, n_pages: int):
+        assert 0 <= n_pages <= self._reserved, (n_pages, self._reserved)
+        self._reserved -= n_pages
+
+    @property
+    def reserved_pages(self) -> int:
+        return self._reserved
 
     @property
     def used_pages(self) -> int:

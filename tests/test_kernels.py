@@ -150,6 +150,52 @@ def test_prefix_prefill_matches_flash_with_dense_prefix():
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, H, Hkv, hd, num_pages, page, pages_per_seq)
+    (2, 8, 2, 64, 16, 16, 4),
+    (3, 4, 4, 128, 32, 8, 8),
+])
+def test_paged_decode_dbuf_parity(shape, dtype):
+    """Async-copy double-buffered page walk == the BlockSpec-pipelined
+    kernel's oracle, pools in compiler-chosen memory, ragged lens."""
+    B, H, Hkv, hd, pages, page, pps = shape
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (pages, page, Hkv, hd),
+                           jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (pages, page, Hkv, hd),
+                           jnp.float32).astype(dtype)
+    table = jax.random.permutation(ks[0], pages)[:B * pps].reshape(B, pps)
+    table = table.astype(jnp.int32)
+    lens = jnp.array([1 + (11 * i + 7) % (pps * page) for i in range(B)],
+                     jnp.int32)
+    ref = paged_decode_ref(q, kp, vp, table, lens)
+    out = paged_decode(q, kp, vp, table, lens, dbuf=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+def test_prefix_prefill_dbuf_parity():
+    """Double-buffered paged-prefix loads == oracle, incl. ragged prefix,
+    ragged suffix, and a trash-padded table slot."""
+    B, H, Hkv, Sq, hd, pages, page, npp = 2, 4, 2, 48, 64, 12, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, Sq, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, Sq, hd))
+    kp = jax.random.normal(ks[3], (pages, page, Hkv, hd))
+    vp = jax.random.normal(ks[4], (pages, page, Hkv, hd))
+    table = jnp.arange(B * npp, dtype=jnp.int32).reshape(B, npp)
+    table = table.at[1, 2:].set(0)
+    plens = jnp.array([npp * page, 2 * page], jnp.int32)
+    slens = jnp.array([Sq, Sq - 9], jnp.int32)
+    ref = prefix_prefill_ref(q, k, v, kp, vp, table, plens, slens)
+    out = prefix_prefill(q, k, v, kp, vp, table, plens, slens,
+                         block_q=16, block_kv=16, dbuf=True, interpret=True)
+    np.testing.assert_allclose(out, ref, atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_paged_insert_parity(dtype):
     """Kernel splice == the dense .at[pidx, off].set oracle, including a
     duplicate trash-page target (garbage by design, shapes must hold)."""
