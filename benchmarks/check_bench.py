@@ -83,7 +83,7 @@ def diff(prev, cur, tol: float = DEFAULT_TOL) -> list:
     # wall-clock rows are only comparable when both snapshots recorded the
     # machine-speed calibration; scale prev's rows onto cur's machine
     scale = (c1 / c0 if isinstance(c0, (int, float)) and c0 > 0
-             and isinstance(c1, (int, float)) else None)
+             and isinstance(c1, (int, float)) and c1 > 0 else None)
     for sect, rows in cur["headline"].items():
         prows = prev["headline"].get(sect) or {}
         for name, row in rows.items():

@@ -58,7 +58,9 @@ class FCFSQueue(Generic[T]):
 
     def form_batch(self, budget: int, max_batch: Optional[int] = None,
                    can_take: Optional[Callable[[T], bool]] = None,
-                   chunk_tokens: Optional[int] = None) -> List[T]:
+                   chunk_tokens: Optional[int] = None,
+                   resumable: Optional[Callable[[T], bool]] = None
+                   ) -> List[T]:
         """Paper §4.3: total new tokens per batch ~ L_m; oversized prompts
         go alone; FCFS order preserved (no reordering — convoy effects are
         accepted, preemption is future work per the paper).
@@ -71,17 +73,31 @@ class FCFSQueue(Generic[T]):
         ``min(token_of(item), chunk_tokens)`` — the caller runs at most one
         chunk per item and re-pushes unfinished items (with a smaller
         `token_of`), so a long prompt no longer monopolizes the batch.
+
+        `resumable` marks items whose capacity is *already reserved*
+        (chunked partial prefills re-queued between chunks). When the head
+        of the queue fails `can_take`, the batch may start from the first
+        resumable item behind it instead of returning empty: those items
+        free their reservation only by finishing, so draining them past a
+        blocked head is the difference between progress and deadlock. New
+        (non-resumable) items are never taken out of FCFS order.
         """
         if not self.items:
             return []
+        start = 0
         if can_take is not None and not can_take(self.items[0]):
-            return []
+            if resumable is None:
+                return []
+            start = next((j for j, it in enumerate(self.items)
+                          if resumable(it)), -1)
+            if start < 0:
+                return []
 
         def charge(item: T) -> int:
             t = self.token_of(item)
             return min(t, chunk_tokens) if chunk_tokens else t
 
-        batch = [self.items.pop(0)]
+        batch = [self.items.pop(start)]
         tok = charge(batch[0])
         taken = self.token_of(batch[0])
         while self.items and tok + charge(self.items[0]) <= budget:

@@ -454,7 +454,9 @@ class SimDisaggBackend(_SimBackend):
                 h, _ = p.tree.match(r.tokens)
                 h = min(h, ((S - 1) // ps) * ps)
                 r.prefix_hit = h
-                p.tree.insert(r.tokens[:(S // ps) * ps])
+                # publish happens at the FINAL chunk (_on_chunk_done),
+                # matching the live engine's prefill_chunk: a prompt
+                # cancelled mid-prefill never enters the tree
             self._chunk_ctx[r.rid] = r.prefix_hit
         ctx = self._chunk_ctx[r.rid]
         c = min(self.chunk_tokens, S - ctx)
@@ -492,6 +494,13 @@ class SimDisaggBackend(_SimBackend):
                 # wire can overlap the remaining chunks' compute
                 self._predispatch_decode(state, t)
         else:
+            if p.tree is not None and r.tokens is not None:
+                # final chunk: publish the whole prompt into the prefix
+                # tree, the same point the live engine inserts (never
+                # earlier — concurrent arrivals must not hit a prompt
+                # whose KV is still being computed)
+                ps = self.page_tokens
+                p.tree.insert(r.tokens[:(r.in_len // ps) * ps])
             r.first_token = t
             self._emit_token(state, -1, t)
             self._chunk_ctx.pop(r.rid, None)
@@ -635,11 +644,14 @@ class SimDisaggBackend(_SimBackend):
         state = self._states[r.rid]
         if state.done:      # cancelled on the wire: pages already freed
             return
-        r.transfer_done = t_full
+        # a granted stream's wire may have finished during prefill
+        # (t_full < t): clamp forward so the recorded timeline stays
+        # monotone (decode_admit <= transfer_done), as in the live twin
+        r.transfer_done = max(t_full, t)
         r.decode_admit = t
         d.in_transfer -= 1
         d.arrived.append(r)
-        d.kv_full[r.rid] = t_full
+        d.kv_full[r.rid] = r.transfer_done
         state.where = ("arrived", d.iid)
         self._try_start_decode(d, t)
 

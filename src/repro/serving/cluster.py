@@ -260,9 +260,13 @@ class DisaggCluster(_LiveBackend):
         at *first*-chunk completion so the wire can overlap the remaining
         chunks' compute."""
         e = self.prefill[i]
+        # a page-blocked *new* head must not strand the resumable partials
+        # queued behind it: their reservations free only by finishing, so
+        # form_batch may drain them past the head (retry for the head
+        # arrives via the poke each pull/finish schedules)
         batch = self.queues[i].form_batch(
             self.lm_tokens, max_batch=1, can_take=e.can_start_chunked,
-            chunk_tokens=self.chunk_tokens)
+            chunk_tokens=self.chunk_tokens, resumable=e.has_partial)
         if not batch:
             return
         seq = batch[0]
@@ -326,6 +330,13 @@ class DisaggCluster(_LiveBackend):
         if state.done:                      # cancelled mid-final-chunk
             release_blob(blob)
             self.tx.drop_partial(state.rid)
+            return
+        if state.rid not in self._stream:
+            # a decode-failure re-route (_on_fail_decode) reclaimed the
+            # stream at this same timestamp and queued a fresh
+            # predispatch behind this event; defer until that lands and
+            # re-establishes the route
+            self._ev.push(t, "finalize_stream", (state, blob))
             return
         di, src, skip = self._stream.pop(state.rid)
         seq = state.seq
@@ -405,11 +416,13 @@ class DisaggCluster(_LiveBackend):
         d.insert_kv(seq, wire, shared=pinned, skip_tokens=skip)
         d.unpin(pinned)
         # per-layer streaming: decode starts attending once the first
-        # layer of the last chunk lands, not at blob-complete
+        # layer of the last chunk lands, not at blob-complete; a granted
+        # stream's wire may have finished during prefill (t_full < now),
+        # so both marks clamp forward to keep the timeline monotone
         seq.kv_first = max(now, t_first)
-        seq.kv_full = t_full
+        seq.kv_full = max(t_full, seq.kv_first)
         req.decode_admit = seq.kv_first
-        req.transfer_done = t_full
+        req.transfer_done = seq.kv_full
         state.to_status(RequestStatus.DECODING)
         self._d_active[i].append(seq)
         # the pull released prefill-side pages: a stalled chunked prefill

@@ -538,6 +538,12 @@ class Engine:
         return first, (blob_cache, S), dt
 
     # ---- chunked prefill (incremental state machine) --------------------
+    def has_partial(self, seq: Sequence) -> bool:
+        """True for a sequence mid-chunked-prefill on this engine: its
+        whole residency is already reserved, so it can always resume (the
+        scheduler may drain it past a page-blocked queue head)."""
+        return seq.rid in self._partial
+
     def can_start_chunked(self, seq: Sequence) -> bool:
         """Admission gate for starting a chunked prefill: the *whole*
         prompt's pages are reserved at chunk 0 (minus the cached prefix),

@@ -80,6 +80,30 @@ def test_form_batch_charges_chunk_budget():
     assert q.form_batch(48, chunk_tokens=32) == [long]
 
 
+def test_form_batch_skips_blocked_head_to_resumable():
+    """A head-of-queue item that fails `can_take` (no free pages for a
+    new reservation) must not strand resumable partials queued behind it
+    — their reservations free only by finishing. New items are never
+    reordered; the blocked head keeps its FCFS priority."""
+    q = FCFSQueue(token_of=lambda r: r.in_len)
+    blocked, part = Request(0, 0.0, 100, 4), Request(1, 0.0, 60, 4)
+    started = {1}                       # rid 1 already holds its pages
+    can_take = lambda r: r.rid in started
+    resumable = lambda r: r.rid in started
+    q.push(blocked)
+    q.push(part)
+    # without the escape hatch the queue wedges behind the blocked head
+    assert q.form_batch(48, chunk_tokens=32, can_take=can_take) == []
+    # with it, the in-flight partial drains past the head
+    assert q.form_batch(48, chunk_tokens=32, can_take=can_take,
+                        resumable=resumable) == [part]
+    assert q.items == [blocked]
+    assert q.queued_tokens == 100
+    # nothing resumable behind the head: still empty, not a crash
+    assert q.form_batch(48, chunk_tokens=32, can_take=can_take,
+                        resumable=resumable) == []
+
+
 # ---------------- transfer manager: per-segment streamed schedule ----------
 
 def test_pull_streamed_degenerates_to_layered():
@@ -246,6 +270,51 @@ def test_cluster_chunked_tokens_identical(params, chunk):
         assert got[rid].tokens == base[rid].tokens, (chunk, rid)
     # multi-chunk prompts really streamed (not the legacy blob path)
     assert dc.tx.streamed_pulls > 0
+
+
+def test_cluster_blocked_head_never_deadlocks_prefill(params):
+    """Regression: with the prefill pool sized for two in-flight chunked
+    prompts, a third prompt rotating to the head of the queue cannot
+    reserve its residency. The resumable partials queued behind it must
+    still drain (freeing their pages at pull time) instead of wedging the
+    engine forever — previously form_batch returned [] on the blocked
+    head with no retry scheduled, and the event loop emptied with every
+    request stuck mid-prefill."""
+    dc = DisaggCluster(CFG, params, n_prefill=1, n_decode=1, max_len=64,
+                       paged=True, page_size=16, chunk_tokens=16,
+                       prefill_num_pages=7, seed=0)   # 6 usable = 2 prompts
+    res = dc.run([Request(i, 0.0, 48, 3) for i in range(3)])
+    assert len(res) == 3
+    for rid in range(3):
+        assert res[rid].finish_reason == "length", rid
+        assert len(res[rid].token_times) == 3
+    _assert_no_leaks(dc)
+
+
+def test_finalize_stream_defers_across_decode_failover(params):
+    """Regression: a decode failure processed at the same timestamp as a
+    queued finalize_stream re-routes the stream (pops the route, queues a
+    fresh predispatch). The finalize handler must defer until the new
+    route lands instead of KeyError-ing on the missing entry."""
+    dc = DisaggCluster(CFG, params, n_prefill=1, n_decode=2, max_len=128,
+                       chunk_tokens=16, transfer_bandwidth=SLOW_BW, seed=0)
+    dc.submit(Request(0, 0.0, 48, 3))
+    # run until the final chunk queued its finalize_stream event
+    while not any(e[2] == "finalize_stream" for e in dc._ev._q):
+        assert dc.step(), "stream never reached its final chunk"
+    t_fin = next(e[0] for e in dc._ev._q if e[2] == "finalize_stream")
+    di, _src, _skip = dc._stream[0]
+    # the failure handler runs first at that same timestamp (its
+    # predispatch lands *behind* the queued finalize)
+    dc._on_fail_decode(di, t_fin)
+    assert 0 not in dc._stream
+    res = dc.drain()
+    assert res[0].finish_reason == "length"
+    assert len(res[0].token_times) == 3
+    # the re-routed stream left nothing behind (the dead engine's
+    # written-off reservation aside)
+    assert not dc.tx.parked and not dc.tx.partial
+    assert not dc.tx._granted and not dc._stream
 
 
 def test_cluster_chunked_tokens_identical_with_prefix_cache(params):
