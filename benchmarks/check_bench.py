@@ -32,7 +32,9 @@ import sys
 
 from .run import BENCH_SCHEMA, HEADLINE, PR
 
+ACCEPTED_SCHEMAS = (1, BENCH_SCHEMA)    # v1: pre-provenance snapshots
 REQUIRED_TOP = ("schema", "pr", "quick", "headline")
+REQUIRED_V2 = ("git_sha", "wall_s")     # provenance stamps (schema 2)
 GAIN_KEYS = ("speedup", "reduction")    # derived metrics: higher is better
 MIN_US = 1000.0                         # ignore sub-ms rows (timer noise)
 DEFAULT_TOL = 0.10
@@ -49,11 +51,26 @@ def check(path: str) -> list:
             errs.append(f"{path}: missing top-level key '{k}'")
     if errs:
         return errs
-    if data["schema"] != BENCH_SCHEMA:
-        errs.append(f"{path}: schema {data['schema']} != {BENCH_SCHEMA}")
+    if data["schema"] not in ACCEPTED_SCHEMAS:
+        errs.append(f"{path}: schema {data['schema']} not in "
+                    f"{ACCEPTED_SCHEMAS}")
     if not isinstance(data["pr"], int) or data["pr"] < 1:
         errs.append(f"{path}: bad pr number {data['pr']!r}")
         return errs
+    if data["schema"] >= 2:
+        for k in REQUIRED_V2:
+            if k not in data:
+                errs.append(f"{path}: schema 2 snapshot missing '{k}'")
+        sha = data.get("git_sha")
+        if sha is not None and not (isinstance(sha, str) and sha):
+            errs.append(f"{path}: bad git_sha {sha!r}")
+        ws = data.get("wall_s")
+        if ws is not None and not (isinstance(ws, dict) and all(
+                isinstance(v, (int, float)) for v in ws.values())):
+            errs.append(f"{path}: wall_s must map benchmark -> seconds")
+    elif data["pr"] >= PR:
+        errs.append(f"{path}: PR {data['pr']} snapshots must use "
+                    f"schema {BENCH_SCHEMA} (provenance stamps)")
     calib = data.get("calib_us")
     if data["pr"] >= PR and not (isinstance(calib, (int, float))
                                  and calib > 0):
@@ -77,6 +94,8 @@ def diff(prev, cur, tol: float = DEFAULT_TOL) -> list:
     """Regressions of `cur` relative to `prev` on shared headline rows."""
     errs = []
     tag = f"PR{prev['pr']} -> PR{cur['pr']}"
+    if cur.get("git_sha") and cur["git_sha"] != "unknown":
+        tag += f" @{cur['git_sha']}"
     if prev.get("quick") != cur.get("quick"):
         return errs          # different workload sizes: nothing comparable
     c0, c1 = prev.get("calib_us"), cur.get("calib_us")
@@ -93,11 +112,17 @@ def diff(prev, cur, tol: float = DEFAULT_TOL) -> list:
             us0, us1 = p.get("us_per_call"), row.get("us_per_call")
             us_ok = (isinstance(us0, (int, float))
                      and isinstance(us1, (int, float)))
+            # flag only when the raw AND machine-adjusted wall-clock both
+            # regressed: the calibration itself is a noisy measurement on
+            # a shared machine, and a ratio-only comparison turns rows
+            # whose raw time *improved* into false alarms
             if (scale is not None and us_ok and us0 >= MIN_US
+                    and us1 > us0 * (1 + tol)
                     and us1 > us0 * scale * (1 + tol)):
                 errs.append(f"{tag}: {name} us_per_call regressed "
                             f"{us0:.1f} -> {us1:.1f} "
-                            f"(+{us1 / (us0 * scale) - 1:.0%} "
+                            f"(+{us1 / us0 - 1:.0%} raw, "
+                            f"+{us1 / (us0 * scale) - 1:.0%} "
                             f"machine-adjusted)")
             # analytic roofline ratios are machine-independent; measured
             # ratios need a >= 1 ms base or they are timer noise

@@ -6,16 +6,33 @@ derived field packs). ``--quick`` trims sweeps for CI-ish runs.
 Every run also snapshots the headline numbers (roofline + paged_kv +
 prefix_cache + serving_api rows) into ``BENCH_<pr>.json`` so re-anchors
 can diff speed trends across PRs; ``--bench-out`` overrides the path.
+
+Schema v2 additionally stamps provenance: the git sha the snapshot was
+taken at and per-benchmark wall-times (``wall_s``), so a trajectory diff
+can say exactly which commit produced which numbers. v1 snapshots (older
+PRs) are still accepted by ``check_bench``.
 """
 import argparse
 import json
+import subprocess
 import sys
 import time
 import traceback
 
-BENCH_SCHEMA = 1
-PR = 7
+BENCH_SCHEMA = 2
+PR = 8
 HEADLINE = ("roofline", "paged_kv", "prefix_cache", "serving_api", "chunked")
+
+
+def git_sha() -> str:
+    """Current commit sha (short), or 'unknown' outside a git checkout."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 
 def calibrate(reps: int = 5) -> float:
@@ -52,9 +69,10 @@ def _parse_derived(derived: str):
     return out
 
 
-def bench_snapshot(rows, quick: bool):
+def bench_snapshot(rows, quick: bool, wall_s=None):
     """Fold the emitted CSV rows into the BENCH_<pr>.json schema."""
     data = {"schema": BENCH_SCHEMA, "pr": PR, "quick": quick,
+            "git_sha": git_sha(), "wall_s": dict(wall_s or {}),
             "calib_us": calibrate(), "headline": {k: {} for k in HEADLINE}}
     for row in rows:
         name, us, derived = row.split(",", 2)
@@ -124,6 +142,7 @@ def main() -> None:
 
     t_all = time.time()
     failures = 0
+    wall_s = {}
     for name, job in jobs:
         t0 = time.time()
         try:
@@ -133,11 +152,13 @@ def main() -> None:
             failures += 1
             traceback.print_exc()
             emit(f"{name}.done", (time.time() - t0) * 1e6, "FAILED")
+        wall_s[name] = round(time.time() - t0, 3)
+    wall_s["total"] = round(time.time() - t_all, 3)
     emit("benchmarks.total", (time.time() - t_all) * 1e6,
          f"jobs={len(jobs)};failures={failures}")
     from .common import ROWS
     with open(args.bench_out, "w") as f:
-        json.dump(bench_snapshot(ROWS, args.quick), f, indent=1)
+        json.dump(bench_snapshot(ROWS, args.quick, wall_s), f, indent=1)
         f.write("\n")
     print(f"wrote {args.bench_out}", flush=True)
     sys.exit(1 if failures else 0)

@@ -7,7 +7,9 @@ Emits:
   serving_api.live.<metric>  — live cluster under streaming + cancels
   serving_api.sim.<metric>   — simulator under the same protocol
 metrics: submit-to-drain wall time per request, attainment, cancel counts,
-and the ITL tail (p99/max) that per-token timestamps expose.
+the ITL tail (p99/max) that per-token timestamps expose, and — from the
+lifecycle tracer — per-request latency attribution columns (queue time
+and migration/transfer time next to TTFT/TPOT).
 """
 from __future__ import annotations
 
@@ -22,6 +24,7 @@ from repro.core.goodput import SLOTracker
 from repro.core.latency_model import LatencyModel, Parallelism
 from repro.core.simulator import (InstanceConfig, SimDisaggBackend,
                                   summarize)
+from repro.core.telemetry import Tracer, attribute_request
 from repro.core.workload import Request, WorkloadSpec, with_cancellations
 from repro.models.api import build_model
 from repro.serving.api import percentile
@@ -60,25 +63,49 @@ def _drive(backend, reqs, tag):
     return handles
 
 
+def _emit_attr(tracer: Tracer, reqs, tag: str):
+    """Attribution-derived latency columns, next to the TTFT/TPOT medians:
+    where a request's time to first token actually went (queue vs prefill)
+    and how long its KV migration + admission took."""
+    atts = [a for a in (attribute_request(tracer, r.rid) for r in reqs)
+            if a is not None and a.terminal == "FINISHED" and a.n_tokens]
+    if not atts:
+        return
+    med = lambda xs: percentile(sorted(xs), 0.5)
+    xfer = [a.migrate_s + a.admit_s for a in atts]
+    pref = [a.prefill_compute_s + a.prefill_stall_s for a in atts]
+    emit(f"serving_api.{tag}.attr", 0.0,
+         f"ttft_ms={med([a.ttft for a in atts]) * 1e3:.2f};"
+         f"tpot_ms={med([a.tpot for a in atts]) * 1e3:.3f};"
+         f"queue_ms={med([a.queue_s for a in atts]) * 1e3:.2f};"
+         f"xfer_ms={med(xfer) * 1e3:.2f};"
+         f"prefill_ms={med(pref) * 1e3:.2f}")
+
+
 def run(quick: bool = False):
     n = 10 if quick else 24
     # live: smoke-scale engines on CPU
     cfg = get_config("yi-6b-smoke")
     params = build_model(cfg).init(jax.random.PRNGKey(0))
     tracker = SLOTracker(SPEC)
+    live_tr = Tracer()
     dc = DisaggCluster(cfg, params, n_prefill=2, n_decode=1, max_batch=4,
-                       max_len=96, lm_tokens=64, tracker=tracker)
-    _drive(dc, _trace(n, rate=20.0, seed=0), "live")
+                       max_len=96, lm_tokens=64, tracker=tracker,
+                       tracer=live_tr)
+    live_reqs = _trace(n, rate=20.0, seed=0)
+    _drive(dc, live_reqs, "live")
     s = tracker.summary()
     emit("serving_api.live.slo", 0.0,
          f"attain={s['attain']};worst_itl_ms={s['worst_itl'] * 1e3:.2f}")
+    _emit_attr(live_tr, live_reqs, "live")
 
     # sim: the same protocol against the latency model, bigger trace
     lm = LatencyModel(get_config("yi-6b"), hw.V5E)
     sim_tracker = SLOTracker(SPEC)
+    sim_tr = Tracer()
     sim = SimDisaggBackend(lm, InstanceConfig(Parallelism(1, 1), 2),
                            InstanceConfig(Parallelism(1, 1), 1),
-                           tracker=sim_tracker)
+                           tracker=sim_tracker, tracer=sim_tr)
     sim_reqs = _trace(10 * n, rate=8.0, seed=1)
     _drive(sim, sim_reqs, "sim")
     res = summarize(sim_reqs, SPEC, extra=sim.extras(), warmup_frac=0.0)
@@ -86,6 +113,7 @@ def run(quick: bool = False):
          f"attain={res.attain:.3f};cancelled={res.n_cancelled};"
          f"itl_p99_ms={res.p99_itl * 1e3:.3f};"
          f"itl_max_ms={res.max_itl * 1e3:.3f}")
+    _emit_attr(sim_tr, sim_reqs, "sim")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,13 @@ chat through the radix prefix cache, and drill a mid-run decode-instance
 failure.
 
     PYTHONPATH=src python examples/serve_disaggregated.py [--arch yi-6b-smoke]
+        [--trace out.json]   # Perfetto/Chrome trace + SLO attribution
+
+With ``--trace``, the multi-turn prefix-cache scenario runs with the
+request-lifecycle tracer on: the full span timeline (queue / chunked
+prefill / streamed migration / decode lanes, flow arrows per request) is
+written as Chrome-trace JSON loadable in Perfetto or chrome://tracing,
+and the top-3 SLO-violating requests print their TTFT/TPOT attribution.
 """
 import argparse
 
@@ -14,6 +21,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.goodput import SLOTracker
+from repro.core.telemetry import (MetricsRegistry, Tracer, save_chrome_trace)
 from repro.core.workload import (Request, WorkloadSpec, sample_multi_turn,
                                  with_cancellations)
 from repro.models.api import build_model
@@ -120,6 +128,10 @@ def chunked_demo(cfg, params):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b-smoke")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="write a Perfetto/Chrome trace of the multi-turn "
+                         "scenario and print top-3 SLO violators with "
+                         "latency attribution")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     params = build_model(cfg).init(jax.random.PRNGKey(0))
@@ -138,10 +150,27 @@ def main():
     # smoke scale, so the cancels must land while requests are in flight
     ct = with_cancellations(chat_trace(cfg), frac=0.3, seed=5,
                             mean_wait_s=0.02)
+    tracer = Tracer() if args.trace else None
+    metrics = MetricsRegistry() if args.trace else None
+    # deliberately tight SLOs so the attribution report has violations
+    # to rank at smoke scale
+    chat_slo = WorkloadSpec("chat-slo", 2.2, 0.4, (4, 24), 1.6, 0.3, (3, 8),
+                            slo_ttft=5e-4, slo_tpot=5e-5)
+    slo = SLOTracker(chat_slo, tracer=tracer) if args.trace else None
     pc = DisaggCluster(cfg, params, n_prefill=1, n_decode=1, max_batch=4,
-                       max_len=128, lm_tokens=96, prefix_cache=True)
+                       max_len=128, lm_tokens=96, prefix_cache=True,
+                       chunk_tokens=16, tracer=tracer, metrics=metrics,
+                       tracker=slo)
     res = pc.run(ct)
     summarize("prefix-cache", res)
+    if args.trace:
+        save_chrome_trace(args.trace, tracer, metrics=metrics)
+        print(f"  trace: {len(tracer.spans)} spans / "
+              f"{len(tracer.instants)} instants across "
+              f"{len(tracer.lanes())} lanes -> {args.trace}")
+        print("  top SLO violators (ttft/tpot attribution):")
+        for v in slo.top_violations(3):
+            print("   ", v.format())
     hit = sum(r.prefix_hit for r in res.values())
     dhit = sum(r.decode_hit for r in res.values())
     prompt = sum(r.in_len for r in ct)

@@ -21,6 +21,31 @@ class GoodputResult:
 
 
 @dataclasses.dataclass
+class SLOViolation:
+    """One request that missed its TTFT and/or TPOT SLO, with the latency
+    attribution (when the backend carried a `Tracer`) naming the dominant
+    cause of the miss."""
+    rid: int
+    ttft: float
+    tpot: float
+    ttft_over: float            # ttft / slo_ttft (1.0 = exactly at SLO)
+    tpot_over: float
+    attribution: Optional[object] = None    # telemetry.Attribution
+
+    @property
+    def severity(self) -> float:
+        return max(self.ttft_over, self.tpot_over)
+
+    def format(self) -> str:
+        head = (f"rid={self.rid} ttft={self.ttft:.4f}s "
+                f"({self.ttft_over:.2f}x slo) tpot={self.tpot:.4f}s "
+                f"({self.tpot_over:.2f}x slo)")
+        if self.attribution is None:
+            return head
+        return head + "\n    " + self.attribution.format()
+
+
+@dataclasses.dataclass
 class SLOReport:
     """Attainment snapshot (the unified metrics object: `summarize` embeds
     it in `SimResult.slo`; live benchmarks print it from the tracker)."""
@@ -57,10 +82,14 @@ class SLOTracker:
     numerator or denominator (an abandoned request has no SLO to meet).
     """
 
-    def __init__(self, spec: WorkloadSpec, slo_scale: float = 1.0):
+    def __init__(self, spec: WorkloadSpec, slo_scale: float = 1.0,
+                 tracer=None):
         self.spec = spec
         self.slo_ttft = spec.slo_ttft * slo_scale
         self.slo_tpot = spec.slo_tpot * slo_scale
+        self.tracer = tracer        # optional telemetry.Tracer: violations
+                                    # get a per-request latency attribution
+        self.violations: List[SLOViolation] = []
         self._ttft: Dict[int, float] = {}       # in-flight: rid -> ttft
         self._last_t: Dict[int, float] = {}
         self._itl_sum: Dict[int, float] = {}
@@ -92,7 +121,21 @@ class SLOTracker:
         if state.status is RequestStatus.FAILED:
             self._report.failed += 1
             return
-        self.observe_result(ttft if ttft is not None else float("inf"), tpot)
+        ttft = ttft if ttft is not None else float("inf")
+        self.observe_result(ttft, tpot)
+        if ttft > self.slo_ttft or tpot > self.slo_tpot:
+            att = None
+            if self.tracer is not None and getattr(self.tracer, "enabled",
+                                                   False):
+                from .telemetry import attribute_request
+                att = attribute_request(self.tracer, rid)
+            self.violations.append(SLOViolation(
+                rid, ttft, tpot, ttft / self.slo_ttft,
+                tpot / self.slo_tpot, att))
+
+    def top_violations(self, n: int = 3) -> List[SLOViolation]:
+        """Worst SLO misses by severity (max of the TTFT/TPOT overrun)."""
+        return sorted(self.violations, key=lambda v: -v.severity)[:n]
 
     # -- bulk path (summarize over recorded traces) ----------------------
     def observe_result(self, ttft: float, tpot: float):

@@ -19,6 +19,8 @@ import dataclasses
 import math
 from typing import Any, Dict, List, Optional, Tuple
 
+from .telemetry import NULL_TRACER
+
 
 def kv_bytes(cfg, prompt_len: int, dtype_bytes: int = 2) -> int:
     """Bytes migrated for one request (the paper's 1.13 GB/512-tok OPT-66B
@@ -108,12 +110,16 @@ class TransferManager:
         self.partial: Dict[int, List[KVSegment]] = {}
         self._granted: Dict[int, float] = {}
         self._link_free_at: Dict[Tuple[int, int], float] = {}
+        self.tracer = NULL_TRACER       # backends swap in their Tracer
 
     def park(self, rid: int, blob: Any, nbytes: int, now: float, src: int = 0,
              wire_s: Optional[float] = None):
         self.parked[rid] = ParkedKV(rid, blob, nbytes, now, src, wire_s)
         self.peak_parked_bytes = max(self.peak_parked_bytes,
                                      self.parked_bytes())
+        if self.tracer.enabled:
+            self.tracer.event("park", now, rid=rid, bytes=int(nbytes),
+                              src=src)
 
     def park_partial(self, rid: int, nbytes: int, now: float,
                      wire_s: Optional[float] = None):
@@ -126,11 +132,15 @@ class TransferManager:
             KVSegment(now, int(nbytes), wire_s))
         self.peak_parked_bytes = max(self.peak_parked_bytes,
                                      self.parked_bytes())
+        if self.tracer.enabled:
+            self.tracer.event("park_chunk", now, rid=rid, bytes=int(nbytes))
 
     def grant(self, rid: int, now: float):
         """Decode side reserved pages for a still-prefilling request: the
         wire may start moving already-parked segments from `now` on, so the
         stream's start floor is the grant time, not the final-park time."""
+        if rid not in self._granted and self.tracer.enabled:
+            self.tracer.event("grant", now, rid=rid)
         self._granted.setdefault(rid, now)
 
     def has_parked(self, rid: int) -> bool:
@@ -152,6 +162,20 @@ class TransferManager:
         return (sum(p.nbytes for p in self.parked.values())
                 + sum(s.nbytes for segs in self.partial.values()
                       for s in segs))
+
+    def stats(self) -> Dict[str, float]:
+        """Pull-collector snapshot for a `MetricsRegistry`."""
+        return {"parked_bytes": self.parked_bytes(),
+                "parked_requests": len(self.parked),
+                "partial_streams": len(self.partial),
+                "peak_parked_bytes": self.peak_parked_bytes,
+                "total_bytes": self.total_bytes,
+                "total_chunks": self.total_chunks,
+                "total_time_s": self.total_time,
+                "layer_overlap_s": self.layer_overlap_s,
+                "stream_saved_s": self.stream_saved_s,
+                "streamed_pulls": self.streamed_pulls,
+                "cancelled_bytes": self.cancelled_bytes}
 
     def cancel(self, rid: int) -> Optional[ParkedKV]:
         """Unpark a request whose transfer will never be pulled (request
@@ -197,6 +221,10 @@ class TransferManager:
         self.layer_overlap_s += dt * (self.n_layers - 1) / self.n_layers
         self.times.append(dt)
         t_first, t_full = layered_times(start, dt, self.n_layers)
+        if self.tracer.enabled:
+            self.tracer.complete("wire", "kv_pull", start, t_full,
+                                 f"wire:{p.src}->{dst}", rid=rid,
+                                 bytes=int(p.nbytes), t_first=t_first)
         return p.blob, t_first, t_full
 
     def pull_streamed(self, rid: int, now: float,
@@ -241,8 +269,13 @@ class TransferManager:
         if not keep:
             self._link_free_at[link] = floor
             self.times.append(0.0)
+            if self.tracer.enabled:
+                self.tracer.complete("wire", "kv_stream", floor, floor,
+                                     f"wire:{p.src}->{dst}", rid=rid,
+                                     bytes=0, segs=0)
             return p.blob, floor, floor
         t = floor
+        t_start = max(floor, keep[0].ready)
         wire_total = 0.0
         w_last = 0.0
         for s in keep:
@@ -264,4 +297,9 @@ class TransferManager:
         last_ready = keep[-1].ready
         self.stream_saved_s += max(last_ready + wire_total - t_full, 0.0)
         self.streamed_pulls += 1
+        if self.tracer.enabled:
+            self.tracer.complete("wire", "kv_stream", t_start, t_full,
+                                 f"wire:{p.src}->{dst}", rid=rid,
+                                 bytes=int(nbytes), segs=len(keep),
+                                 t_first=t_first)
         return p.blob, t_first, t_full

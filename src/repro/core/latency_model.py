@@ -255,3 +255,35 @@ class LatencyModel:
             eff = min(avg_ctx, c.sliding_window) if c.sliding_window else avg_ctx
             per_req = c.kv_bytes_per_token(self.dtype_bytes) * eff
         return max(int(free / max(per_req, 1.0)), 0)
+
+
+@dataclasses.dataclass
+class EngineCharge:
+    """Deterministic virtual-clock charge model for live engines.
+
+    A live `DisaggCluster` normally charges measured `perf_counter` kernel
+    times to its event loop; with `charge=EngineCharge(lm, par)` it charges
+    the analytic `LatencyModel` time for each dispatch instead, so a live
+    run's event timeline — and therefore its trace spans — is
+    float-identical to `SimDisaggBackend` on the same request trace.  The
+    three hooks mirror exactly what the simulator charges:
+
+      prefill  `lm.prefill_time(suffix_lens, par)` — lengths net of any
+               prefix-cache hit, the same lens the sim batches.
+      chunk    `lm.prefill_chunk_time([(new, ctx)], par)`.
+      decode   `lm.decode_time(max(b/pp, 1), ctx/pp, Parallelism(tp, 1))` —
+               the sim's per-stage effective-batch form.
+    """
+    lm: LatencyModel
+    par: Parallelism = Parallelism()
+
+    def prefill(self, suffix_lens: Sequence[int]) -> float:
+        return self.lm.prefill_time(suffix_lens, self.par)
+
+    def chunk(self, new: int, ctx: int) -> float:
+        return self.lm.prefill_chunk_time([(new, ctx)], self.par)
+
+    def decode(self, batch: int, ctx_tokens: float) -> float:
+        eff_b = max(batch / self.par.pp, 1.0)
+        return self.lm.decode_time(eff_b, ctx_tokens / self.par.pp,
+                                   Parallelism(self.par.tp, 1))

@@ -147,10 +147,19 @@ class DisaggDispatcher:
     affinity_slack: int = 1024          # tokens of queue imbalance tolerated
     decisions: List[Tuple[str, int, int, int]] = dataclasses.field(
         default_factory=list)
+    tracer: Any = None                  # backends swap in their Tracer
+
+    def _record(self, kind: str, rid: int, idx: int, hit: int,
+                now: Optional[float]):
+        self.decisions.append((kind, rid, idx, hit))
+        if self.tracer is not None and now is not None:
+            self.tracer.event(f"route_{kind}", now, rid=rid,
+                              instance=idx, hit=hit)
 
     def pick_prefill(self, rid: int, queues: Sequence[FCFSQueue],
                      alive: Optional[Sequence[int]] = None,
-                     hits: Optional[Sequence[int]] = None) -> int:
+                     hits: Optional[Sequence[int]] = None,
+                     now: Optional[float] = None) -> int:
         cand = list(range(len(queues)) if alive is None else alive)
         if hits is not None and max(hits[i] for i in cand) > 0:
             # longest match; ties -> shortest queue -> lowest index
@@ -158,19 +167,20 @@ class DisaggDispatcher:
                                             queues[i].queued_tokens, i))
             qmin = min(queues[i].queued_tokens for i in cand)
             if queues[best].queued_tokens - qmin <= self.affinity_slack:
-                self.decisions.append(("prefill", rid, best, hits[best]))
+                self._record("prefill", rid, best, hits[best], now)
                 return best
         idx = shortest_queue(queues, alive)
-        self.decisions.append(("prefill", rid, idx,
-                               hits[idx] if hits is not None else 0))
+        self._record("prefill", rid, idx,
+                     hits[idx] if hits is not None else 0, now)
         return idx
 
     def pick_decode(self, rid: int, loads: Sequence[float],
                     alive: Optional[Sequence[int]] = None,
-                    hits: Optional[Sequence[int]] = None) -> int:
+                    hits: Optional[Sequence[int]] = None,
+                    now: Optional[float] = None) -> int:
         idx = least_loaded(loads, alive)
-        self.decisions.append(("decode", rid, idx,
-                               hits[idx] if hits is not None else 0))
+        self._record("decode", rid, idx,
+                     hits[idx] if hits is not None else 0, now)
         return idx
 
     def by_rid(self) -> Dict[int, Dict[str, int]]:

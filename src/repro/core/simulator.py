@@ -221,8 +221,9 @@ class _SimBackend(BackendBase):
     stepping, `SamplingParams.max_tokens` caps, and per-request cleanup
     (token ids are not modeled, so stop tokens cannot trigger here)."""
 
-    def _init_sim(self, horizon: float, record_events: bool, tracker):
-        self._init_backend(tracker=tracker)
+    def _init_sim(self, horizon: float, record_events: bool, tracker,
+                  tracer=None, metrics=None):
+        self._init_backend(tracker=tracker, tracer=tracer, metrics=metrics)
         # bulk goodput sweeps simulate millions of tokens: the closed-world
         # shims disable per-token TokenEvent recording (a tracker or
         # on_token callback re-enables it per consumer)
@@ -277,8 +278,10 @@ class SimDisaggBackend(_SimBackend):
                  chunk_tokens: Optional[int] = None,
                  horizon: float = 1e9,
                  tracker=None,
-                 record_events: bool = True):
-        self._init_sim(horizon, record_events, tracker)
+                 record_events: bool = True,
+                 tracer=None, metrics=None):
+        self._init_sim(horizon, record_events, tracker, tracer=tracer,
+                       metrics=metrics)
         self.lm = lm
         self.phase = phase
         self.transfer_bw = transfer_bw
@@ -326,6 +329,42 @@ class SimDisaggBackend(_SimBackend):
         self.busy_decode = 0.0
         self._breakdown = {"lm_tokens": lm_tok, "max_decode_batch": max_b,
                            "decode_pages": n_pages}
+        if self.tracer.enabled:
+            self.tx.tracer = self.tracer
+            self.disp.tracer = self.tracer
+        if metrics is not None:
+            metrics.register(self._collect_metrics)
+
+    def _collect_metrics(self) -> Dict[str, float]:
+        """Pull-collector for a `MetricsRegistry` (the simulator twin of
+        `DisaggCluster._collect_metrics`)."""
+        out: Dict[str, float] = {"busy_prefill_s": self.busy_prefill,
+                                 "busy_decode_s": self.busy_decode}
+        for p in self.P:
+            out[f"queue{p.iid}.depth"] = len(p.queue)
+            out[f"queue{p.iid}.tokens"] = p.queued_tokens
+            out[f"prefill{p.iid}.inflight"] = p.inflight
+        for d in self.D:
+            pre = f"decode{d.iid}"
+            out[f"{pre}.kv.num_pages"] = d.pool.num_pages
+            out[f"{pre}.kv.used_pages"] = d.pool.used
+            out[f"{pre}.kv.free_pages"] = d.pool.free_pages
+            out[f"{pre}.kv.peak_used_pages"] = d.pool.peak_used
+            out[f"{pre}.running"] = len(d.running)
+            out[f"{pre}.pending"] = len(d.pending)
+            out[f"{pre}.arrived"] = len(d.arrived)
+            out[f"{pre}.granted"] = len(d.granted)
+            out[f"{pre}.in_transfer"] = d.in_transfer
+        for k, v in self.tx.stats().items():
+            out[f"tx.{k}"] = v
+        if self.prefix_on:
+            for side, insts in (("prefill", self.P), ("decode", self.D)):
+                for inst in insts:
+                    if inst.tree is None:
+                        continue
+                    for k, v in inst.tree.metrics().items():
+                        out[f"{side}{inst.iid}.prefix.{k}"] = v
+        return out
 
     def _grow_trees(self):
         for inst in (*self.P, *self.D):
@@ -373,9 +412,11 @@ class SimDisaggBackend(_SimBackend):
         if self.prefix_on and r.tokens is not None:
             hits = [p.tree.peek(r.tokens) for p in self.P]
         pi = self.disp.pick_prefill(r.rid, [p.queue for p in self.P],
-                                    hits=hits)
+                                    hits=hits, now=t)
         self.P[pi].queue.push(r)
         state.where = ("prefill", pi)
+        if self.tracer.enabled:
+            self.tracer.phase(r.rid, "queued", t, f"prefill{pi}")
         self._ev.push(t, "prefill_poke", self.P[pi])
 
     def _try_start_prefill(self, p: _PrefillInstance, now: float):
@@ -411,6 +452,13 @@ class SimDisaggBackend(_SimBackend):
                 st = self._states[r.rid]
                 st.where = ("prefill_run", p)
                 st.to_status(RequestStatus.PREFILLING)
+                if self.tracer.enabled:
+                    lane = f"prefill{p.iid}"
+                    self.tracer.phase(r.rid, "prefilling", now, lane)
+                    self.tracer.complete(
+                        "compute", "prefill_batch", now, now + T, lane,
+                        rid=r.rid, tokens=r.in_len - r.prefix_hit,
+                        hit=r.prefix_hit)
             self._ev.push(now + T, "prefill_done", (p, batch, T))
 
     def _on_prefill_done(self, payload, t: float):
@@ -464,6 +512,11 @@ class SimDisaggBackend(_SimBackend):
             c = min(max((c // ps) * ps, ps), S - ctx)
         T = self.lm.prefill_chunk_time([(c, ctx)], p.par)
         p.inflight += 1
+        if self.tracer.enabled:
+            lane = f"prefill{p.iid}"
+            self.tracer.phase(r.rid, "prefilling", now, lane)
+            self.tracer.complete("compute", "chunk", now, now + T, lane,
+                                 rid=r.rid, tokens=c, ctx=ctx)
         self._ev.push(now + T, "chunk_done", (p, r, T, ctx, c))
 
     def _on_chunk_done(self, payload, t: float):
@@ -519,7 +572,7 @@ class SimDisaggBackend(_SimBackend):
         if self.prefix_on and r.tokens is not None:
             d_hits = [d.tree.peek(r.tokens) for d in self.D]
         di = self.disp.pick_decode(r.rid, [d.load for d in self.D],
-                                   hits=d_hits)
+                                   hits=d_hits, now=now)
         r.decode_hit = d_hits[di] if d_hits else 0
         self._sim_stream[r.rid] = di
         self.D[di].pending.append(r)
@@ -537,6 +590,8 @@ class SimDisaggBackend(_SimBackend):
         self.tx.park(r.rid, r, nbytes, now, src=src)
         state.where = ("pending", di)
         state.to_status(RequestStatus.MIGRATING)
+        if self.tracer.enabled:
+            self.tracer.phase(r.rid, "migrating", now, f"decode{di}")
         self._ev.push(now, "decode_poke", self.D[di])
 
     def _drop_sim_stream(self, r: Request, t: float):
@@ -561,7 +616,7 @@ class SimDisaggBackend(_SimBackend):
         if self.prefix_on and r.tokens is not None and self.phase != "decode":
             d_hits = [d.tree.peek(r.tokens) for d in self.D]
         di = self.disp.pick_decode(r.rid, [d.load for d in self.D],
-                                   hits=d_hits)
+                                   hits=d_hits, now=now)
         # wire bytes = prompt KV the decode side is missing (decode
         # positions are produced there; a shared prefix already resides
         # there); page reservation below covers the full residency. wire
@@ -580,6 +635,8 @@ class SimDisaggBackend(_SimBackend):
         self.D[di].pending.append(r)
         state.where = ("pending", di)
         state.to_status(RequestStatus.MIGRATING)
+        if self.tracer.enabled:
+            self.tracer.phase(r.rid, "migrating", now, f"decode{di}")
         self._ev.push(now, "decode_poke", self.D[di])
 
     def _try_admit(self, d: _DecodeInstance, now: float):
@@ -618,6 +675,9 @@ class SimDisaggBackend(_SimBackend):
                 break
             if st.status is RequestStatus.MIGRATING:
                 st.to_status(RequestStatus.PENDING_ADMIT)
+                if self.tracer.enabled:
+                    self.tracer.phase(r.rid, "pending_admit", now,
+                                      f"decode{d.iid}")
 
     def _start_pull(self, d: _DecodeInstance, r: Request, now: float):
         """Start a request's wire transfer (pages already allocated)."""
@@ -650,6 +710,10 @@ class SimDisaggBackend(_SimBackend):
         r.transfer_done = max(t_full, t)
         r.decode_admit = t
         d.in_transfer -= 1
+        if self.tracer.enabled:
+            # decode starts attending once the first layer lands — the
+            # same instant the live cluster stamps in `_admit_one`
+            self.tracer.phase(r.rid, "decoding", t, f"decode{d.iid}")
         d.arrived.append(r)
         d.kv_full[r.rid] = r.transfer_done
         state.where = ("arrived", d.iid)
@@ -682,6 +746,10 @@ class SimDisaggBackend(_SimBackend):
                     # same charge the live cluster applies
                     end = max(end, pipelined_finish(now, tau, kf,
                                                     self.tx.n_layers))
+        if self.tracer.enabled:
+            self.tracer.complete("step", "decode_step", now, end,
+                                 f"decode{d.iid}", batch=len(d.running),
+                                 compute=tau)
         self._ev.push(end, "decode_iter", (d, tau))
 
     def _on_decode_iter(self, payload, t: float):
@@ -839,8 +907,11 @@ class SimColocatedBackend(_SimBackend):
                  kv_reserve: float = 0.1,
                  horizon: float = 1e9,
                  tracker=None,
-                 record_events: bool = True):
-        self._init_sim(horizon, record_events, tracker)
+                 record_events: bool = True,
+                 tracer=None,
+                 metrics=None):
+        self._init_sim(horizon, record_events, tracker,
+                       tracer=tracer, metrics=metrics)
         self.lm = lm
         self.par = inst.par
         self.max_prefill_tokens = max_prefill_tokens
@@ -850,6 +921,16 @@ class SimColocatedBackend(_SimBackend):
         cap = max(cap, lm.chip.hbm_bytes * 0.05 * inst.par.num_chips)
         self.engines = [_ColoEngine(i, max_b, cap)
                         for i in range(inst.count)]
+        if metrics is not None:
+            metrics.register(self._collect_metrics)
+
+    def _collect_metrics(self):
+        out = {}
+        for e in self.engines:
+            out[f"engine{e.iid}.queue.depth"] = float(len(e.waiting))
+            out[f"engine{e.iid}.running"] = float(len(e.running))
+            out[f"engine{e.iid}.kv_used_bytes"] = float(e.kv_used)
+        return out
 
     # -- ServingBackend hooks -------------------------------------------
     def _do_submit(self, state: RequestState, t: float):
@@ -872,6 +953,8 @@ class SimColocatedBackend(_SimBackend):
         e = self.engines[least_loaded([x.load for x in self.engines])]
         e.waiting.push(state.request)
         state.where = ("queued", e)
+        if self.tracer.enabled:
+            self.tracer.phase(state.rid, "queued", t, f"engine{e.iid}")
         self._step_engine(e, t)
 
     def _step_engine(self, e: _ColoEngine, now: float):
@@ -901,6 +984,12 @@ class SimColocatedBackend(_SimBackend):
                 st = self._states[r.rid]
                 st.where = ("prefill_run", e)
                 st.to_status(RequestStatus.PREFILLING)
+                if self.tracer.enabled:
+                    lane = f"engine{e.iid}"
+                    self.tracer.phase(r.rid, "prefilling", now, lane)
+                    self.tracer.complete(
+                        "compute", "prefill_batch", now, now + T, lane,
+                        rid=r.rid, tokens=r.in_len, hit=0)
             self._ev.push(now + T, "prefill_done", (e, batch))
             return
         if e.running:
@@ -909,6 +998,10 @@ class SimColocatedBackend(_SimBackend):
             ctx = sum(r.in_len + r.tokens_done for r in e.running)
             tau = self.lm.decode_time(eff_b, ctx / self.par.pp,
                                       Parallelism(self.par.tp, 1))
+            if self.tracer.enabled:
+                self.tracer.complete("step", "decode_step", now, now + tau,
+                                     f"engine{e.iid}",
+                                     batch=len(e.running), compute=tau)
             self._ev.push(now + tau, "decode_iter", (e, tau))
 
     def _on_prefill_done(self, payload, t: float):
@@ -924,6 +1017,8 @@ class SimColocatedBackend(_SimBackend):
             self._emit_token(state, -1, t)
             state.where = ("running", e)
             state.to_status(RequestStatus.DECODING)
+            if self.tracer.enabled:
+                self.tracer.phase(r.rid, "decoding", t, f"engine{e.iid}")
             e.running.append(r)
         self._step_engine(e, t)
 

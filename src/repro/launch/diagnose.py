@@ -2,10 +2,14 @@ import os
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
                            + os.environ.get("XLA_FLAGS", ""))
 """Dump the largest trip-weighted collectives of a cell with their source
-op names (hillclimb profiling aid).
+op names (hillclimb profiling aid), or — with ``--serve-metrics`` — a
+Prometheus-style metrics snapshot from a smoke serving run (queue depths,
+page-pool occupancy, transfer totals, TTFT/TPOT histograms).
 
   PYTHONPATH=src python -m repro.launch.diagnose --arch gemma3-1b \
       --shape decode_32k [--opt ...] [--top 15]
+  PYTHONPATH=src python -m repro.launch.diagnose --arch yi-6b-smoke \
+      --serve-metrics
 """
 import argparse
 import re
@@ -20,15 +24,48 @@ _OP_RE = re.compile(
 _NAME_RE = re.compile(r'op_name="([^"]+)"')
 
 
+def serve_metrics(arch: str) -> None:
+    """Smoke serving run with the metrics registry attached; dumps the
+    Prometheus text snapshot (engine/queue/transfer pull-collectors plus
+    the request counters and latency histograms)."""
+    import jax
+    import numpy as np
+    from ..configs import get_config
+    from ..core.telemetry import MetricsRegistry
+    from ..core.workload import Request
+    from ..models.api import build_model
+    from ..serving.cluster import DisaggCluster
+
+    cfg = get_config(arch)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    metrics = MetricsRegistry()
+    dc = DisaggCluster(cfg, params, n_prefill=1, n_decode=1, max_batch=4,
+                       max_len=96, lm_tokens=64, metrics=metrics)
+    rng = np.random.default_rng(0)
+    dc.run([Request(i, i * 0.01, int(rng.integers(8, 40)),
+                    int(rng.integers(4, 8))) for i in range(8)])
+    print(metrics.prometheus(), end="")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--shape", default=None)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--mode", default=None)
     ap.add_argument("--opt", default="")
     ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--serve-metrics", action="store_true",
+                    help="run a smoke serving workload and dump a "
+                         "Prometheus-style metrics snapshot instead of "
+                         "the collectives report")
     args = ap.parse_args()
+
+    if args.serve_metrics:
+        serve_metrics(args.arch)
+        return
+    if not args.shape:
+        ap.error("--shape is required unless --serve-metrics is given")
 
     opts = tuple(o for o in args.opt.split(",") if o)
     import repro.launch.dryrun as dr

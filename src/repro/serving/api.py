@@ -317,12 +317,15 @@ class BackendBase:
     holds at its current lifecycle stage).
     """
 
-    def _init_backend(self, tracker=None):
+    def _init_backend(self, tracker=None, tracer=None, metrics=None):
         from ..core.scheduler import EventLoop
+        from ..core.telemetry import NULL_TRACER
         self._ev = EventLoop()
         self._states: Dict[int, RequestState] = {}
         self.results: Dict[int, ServedResult] = {}
         self.tracker = tracker
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
         # per-token TokenEvent recording; simulator shims turn this off
         # for bulk goodput sweeps (millions of simulated tokens) — a
         # tracker or a per-request on_token callback still records
@@ -417,13 +420,17 @@ class BackendBase:
     # -- lifecycle plumbing for subclasses -----------------------------
     @property
     def _recording(self) -> bool:
-        return self._record_tokens or self.tracker is not None
+        return (self._record_tokens or self.tracker is not None
+                or self.tracer.enabled)
 
     def _emit_token(self, state: RequestState, token: int, t: float):
         if not self._record_tokens and self.tracker is None \
-                and state.on_token is None:
+                and state.on_token is None and not self.tracer.enabled:
             return
         state.record_token(token, t)
+        if self.tracer.enabled:
+            self.tracer.event("token", t, rid=state.rid,
+                              i=len(state.events) - 1)
         if self.tracker is not None:
             self.tracker.observe_event(state, state.events[-1])
 
@@ -447,8 +454,28 @@ class BackendBase:
             state.request.tokens_done = max(len(state.events) - 1, 0)
         self.results[state.rid] = ServedResult.from_state(state)
         self._forget(state.rid)
+        if self.tracer.enabled:
+            self.tracer.finish_phase(state.rid, state.request.finish,
+                                     state.status.name)
+        if self.metrics is not None:
+            self._observe_metrics(state)
         if self.tracker is not None:
             self.tracker.observe_finish(state)
+
+    def _observe_metrics(self, state: RequestState):
+        m, req, n = self.metrics, state.request, len(state.events)
+        if state.status is RequestStatus.CANCELLED:
+            m.counter("requests_cancelled")
+        elif state.status is RequestStatus.FAILED:
+            m.counter("requests_failed")
+        else:
+            m.counter("requests_finished")
+            if n:
+                m.observe("ttft_s", req.first_token - req.arrive)
+                m.observe("e2e_s", req.finish - req.arrive)
+            if n > 1:
+                m.observe("tpot_s", (req.finish - req.first_token) / (n - 1))
+        m.counter("tokens_emitted", n)
 
     def _forget(self, rid: int):
         """Drop per-request hot-loop bookkeeping once a request goes

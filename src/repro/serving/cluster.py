@@ -59,18 +59,20 @@ class _LiveBackend(BackendBase):
     """Sequence construction shared by both live clusters (previously
     copied between the two `run` loops with a hardcoded rng seed)."""
 
-    def _init_live(self, cfg, seed: int, tracker=None):
+    def _init_live(self, cfg, seed: int, tracker=None, tracer=None,
+                   metrics=None):
         self.cfg = cfg
         self.seed = seed
         self._rng = np.random.default_rng(seed)
-        self._init_backend(tracker=tracker)
+        self._init_backend(tracker=tracker, tracer=tracer, metrics=metrics)
 
     def _reset_loop(self):
         """Fresh event loop, virtual clocks, and token rng (the legacy
         `run` contract: every replay of the same trace restarts at t=0
         and derives identical token streams)."""
         self._rng = np.random.default_rng(self.seed)
-        self._init_backend(tracker=self.tracker)
+        self._init_backend(tracker=self.tracker,
+                           tracer=self.tracer or None, metrics=self.metrics)
         self._reset_clocks()
 
     def _reset_clocks(self):
@@ -98,8 +100,15 @@ class DisaggCluster(_LiveBackend):
                  prefill_num_pages: Optional[int] = None,
                  fused_prefix: Optional[bool] = None,
                  chunk_tokens: Optional[int] = None,
-                 seed: int = 0, tracker=None):
-        self._init_live(cfg, seed, tracker=tracker)
+                 seed: int = 0, tracker=None, tracer=None,
+                 charge=None, metrics=None):
+        self._init_live(cfg, seed, tracker=tracker, tracer=tracer,
+                        metrics=metrics)
+        # optional deterministic charge model: replace measured kernel
+        # times with `core.latency_model.EngineCharge` analytic times, so
+        # the live event timeline (and trace) is float-identical to the
+        # simulator's on the same request trace
+        self.charge = charge
         if (prefix_cache or chunk_tokens) and prefill_num_pages is None:
             # a prefill engine's default pool (one resident sequence) has
             # no room to retain prefixes or to hold several chunked
@@ -152,6 +161,30 @@ class DisaggCluster(_LiveBackend):
         # rid -> (decode_idx, src_prefill, skip): streamed-migration route
         # chosen at first-chunk completion
         self._stream: Dict[int, Tuple[int, int, int]] = {}
+        if self.tracer.enabled:
+            self.tx.tracer = self.tracer
+            self.dispatcher.tracer = self.tracer
+        if metrics is not None:
+            metrics.register(self._collect_metrics)
+
+    def _collect_metrics(self) -> Dict[str, float]:
+        """Pull-collector for a `MetricsRegistry`: per-engine dispatch and
+        page-pool stats, queue depths, transfer-manager totals."""
+        out: Dict[str, float] = {}
+        for side, engines in (("prefill", self.prefill),
+                              ("decode", self.decode)):
+            for i, e in enumerate(engines):
+                for k, v in e.stats().items():
+                    out[f"{side}{i}.{k}"] = v
+        for i, q in enumerate(self.queues):
+            out[f"queue{i}.depth"] = len(q)
+            out[f"queue{i}.tokens"] = q.queued_tokens
+        for k, v in self.tx.stats().items():
+            out[f"tx.{k}"] = v
+        out["decode_pending"] = sum(len(p) for p in self._d_pending)
+        out["decode_granted"] = sum(len(g) for g in self._d_granted)
+        out["decode_active"] = sum(len(a) for a in self._d_active)
+        return out
 
     # -- fault injection ------------------------------------------------
     def fail_decode(self, idx: int) -> List[int]:
@@ -219,9 +252,12 @@ class DisaggCluster(_LiveBackend):
         seq = state.seq
         qi = self.dispatcher.pick_prefill(state.rid, self.queues,
                                           self._alive_p(),
-                                          hits=self._prefill_hits(seq.tokens))
+                                          hits=self._prefill_hits(seq.tokens),
+                                          now=t)
         self.queues[qi].push(seq)
         state.where = ("prefill", qi)
+        if self.tracer.enabled:
+            self.tracer.phase(state.rid, "queued", t, f"prefill{qi}")
         self._ev.push(t, "poke_prefill", qi)
 
     def _poke_prefill(self, i: int, now: float):
@@ -239,6 +275,15 @@ class DisaggCluster(_LiveBackend):
             state.to_status(RequestStatus.PREFILLING)
             req = state.request
             first, blob, dt = self.prefill[i].prefill_request(seq)
+            if self.charge is not None:
+                dt = self.charge.prefill([len(seq.tokens) - seq.prefix_hit])
+            if self.tracer.enabled:
+                self.tracer.phase(seq.rid, "prefilling", now, f"prefill{i}")
+                self.tracer.complete(
+                    "compute", "prefill_batch", now, now + dt,
+                    f"prefill{i}", rid=seq.rid,
+                    tokens=len(seq.tokens) - seq.prefix_hit,
+                    hit=seq.prefix_hit)
             seq.append_token(first)
             req.first_token = now + dt
             self._emit_token(state, first, now + dt)
@@ -275,7 +320,14 @@ class DisaggCluster(_LiveBackend):
         state.to_status(RequestStatus.PREFILLING)
         prev = seq.prefilled
         done, first, blob, dt, _c = e.prefill_chunk(seq, self.chunk_tokens)
+        if self.charge is not None:
+            dt = self.charge.chunk(_c, prev)
         t_end = now + dt
+        if self.tracer.enabled:
+            self.tracer.phase(seq.rid, "prefilling", now, f"prefill{i}")
+            self.tracer.complete("compute", "chunk", now, t_end,
+                                 f"prefill{i}", rid=seq.rid,
+                                 tokens=_c, ctx=prev)
         state.progress = seq.prefilled
         seg_bytes = kv_bytes(self.cfg, seq.prefilled) - \
             (kv_bytes(self.cfg, prev) if prev else 0)
@@ -316,7 +368,8 @@ class DisaggCluster(_LiveBackend):
         if self.prefix_cache:
             d_hits = [self.decode[i].prefix_peek(seq.tokens[:n_tok])
                       for i in range(len(self.decode))]
-        di = self.dispatcher.pick_decode(req.rid, loads, alive, hits=d_hits)
+        di = self.dispatcher.pick_decode(req.rid, loads, alive, hits=d_hits,
+                                         now=t)
         skip, pinned = self.decode[di].pin_prefix(seq.tokens[:n_tok])
         self._stream[state.rid] = (di, src, skip)
         self._d_pending[di].append((state, skip, pinned))
@@ -345,6 +398,8 @@ class DisaggCluster(_LiveBackend):
         self.tx.park(seq.rid, blob, nbytes, t, src=src)
         state.where = ("decode", di)
         state.to_status(RequestStatus.MIGRATING)
+        if self.tracer.enabled:
+            self.tracer.phase(seq.rid, "migrating", t, f"decode{di}")
         self._ev.push(t, "poke_decode", di)
 
     def _drop_stream(self, state: RequestState, t: float):
@@ -386,7 +441,8 @@ class DisaggCluster(_LiveBackend):
         if self.prefix_cache:
             d_hits = [self.decode[i].prefix_peek(seq.tokens[:n_tok])
                       for i in range(len(self.decode))]
-        di = self.dispatcher.pick_decode(req.rid, loads, alive, hits=d_hits)
+        di = self.dispatcher.pick_decode(req.rid, loads, alive, hits=d_hits,
+                                         now=t)
         # pin the decode-resident prefix and ship only the rest
         skip, pinned = self.decode[di].pin_prefix(seq.tokens[:n_tok])
         ship = n_tok - skip
@@ -395,6 +451,8 @@ class DisaggCluster(_LiveBackend):
         self._d_pending[di].append((state, skip, pinned))
         state.where = ("decode", di)
         state.to_status(RequestStatus.MIGRATING)
+        if self.tracer.enabled:
+            self.tracer.phase(seq.rid, "migrating", t, f"decode{di}")
         self._ev.push(t, "poke_decode", di)
 
     def _admit_one(self, i: int, state: RequestState, skip: int,
@@ -424,6 +482,11 @@ class DisaggCluster(_LiveBackend):
         req.decode_admit = seq.kv_first
         req.transfer_done = seq.kv_full
         state.to_status(RequestStatus.DECODING)
+        if self.tracer.enabled:
+            # decode starts attending at first-layer-landed, the same
+            # instant the simulator stamps `decode_admit`
+            self.tracer.phase(seq.rid, "decoding", seq.kv_first,
+                              f"decode{i}")
         self._d_active[i].append(seq)
         # the pull released prefill-side pages: a stalled chunked prefill
         # may be able to start its next prompt now
@@ -491,11 +554,17 @@ class DisaggCluster(_LiveBackend):
                 break
             if state.status is RequestStatus.MIGRATING:
                 state.to_status(RequestStatus.PENDING_ADMIT)
+                if self.tracer.enabled:
+                    self.tracer.phase(state.rid, "pending_admit", now,
+                                      f"decode{i}")
         d._active = self._d_active[i]
         if not self._d_active[i]:
             return
         batch = self._d_active[i]
+        ctx_tokens = sum(len(s.tokens) - 1 for s in batch)
         dt = d.decode_step(batch)
+        if self.charge is not None:
+            dt = self.charge.decode(len(batch), ctx_tokens)
         done_t = now + dt
         for seq in batch:
             if seq.kv_full > now:
@@ -506,6 +575,9 @@ class DisaggCluster(_LiveBackend):
                     now, dt, seq.kv_full, self.tx.n_layers))
             seq.kv_first = seq.kv_full = 0.0
         self._d_free[i] = done_t
+        if self.tracer.enabled:
+            self.tracer.complete("step", "decode_step", now, done_t,
+                                 f"decode{i}", batch=len(batch), compute=dt)
         still = []
         for seq in batch:
             state = self._states[seq.rid]
@@ -533,10 +605,12 @@ class DisaggCluster(_LiveBackend):
                 continue
             qi = self.dispatcher.pick_prefill(
                 rid, self.queues, self._alive_p(),
-                hits=self._prefill_hits(seq.tokens))
+                hits=self._prefill_hits(seq.tokens), now=t)
             self.queues[qi].push(seq)
             state.where = ("prefill", qi)
             state.to_status(RequestStatus.QUEUED)
+            if self.tracer.enabled:
+                self.tracer.phase(rid, "queued", t, f"prefill{qi}")
             self._ev.push(t, "poke_prefill", qi)
         self._d_active[idx] = []
         # also re-route ready-but-unpulled requests (drop the dead
@@ -650,8 +724,11 @@ class ColocatedCluster(_LiveBackend):
                  attn_blocks=(64, 64), page_size: int = 16,
                  num_pages: Optional[int] = None,
                  paged: Optional[bool] = None,
-                 seed: int = 0, tracker=None):
-        self._init_live(cfg, seed, tracker=tracker)
+                 seed: int = 0, tracker=None, tracer=None,
+                 charge=None, metrics=None):
+        self._init_live(cfg, seed, tracker=tracker, tracer=tracer,
+                        metrics=metrics)
+        self.charge = charge
         self.engines = [Engine(cfg, params, max_batch=max_batch,
                                max_len=max_len, attn_blocks=attn_blocks,
                                paged=paged, page_size=page_size,
@@ -662,6 +739,18 @@ class ColocatedCluster(_LiveBackend):
                          for _ in self.engines]
         self._active: List[List[Sequence]] = [[] for _ in self.engines]
         self._free_at = [0.0] * n_engines
+        if metrics is not None:
+            metrics.register(self._collect_metrics)
+
+    def _collect_metrics(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for i, e in enumerate(self.engines):
+            for k, v in e.stats().items():
+                out[f"engine{i}.{k}"] = v
+            out[f"queue{i}.depth"] = len(self._waiting[i])
+            out[f"queue{i}.tokens"] = self._waiting[i].queued_tokens
+            out[f"engine{i}.active"] = len(self._active[i])
+        return out
 
     def _reset_clocks(self):
         self._waiting = [FCFSQueue(token_of=lambda s: len(s.tokens))
@@ -687,6 +776,8 @@ class ColocatedCluster(_LiveBackend):
                           for j in range(len(self.engines))])
         self._waiting[i].push(state.seq)
         state.where = ("engine", i)
+        if self.tracer.enabled:
+            self.tracer.phase(state.rid, "queued", t, f"engine{i}")
         self._ev.push(t, "poke", i)
 
     def _step_engine(self, i: int, now: float):
@@ -703,6 +794,15 @@ class ColocatedCluster(_LiveBackend):
             state.to_status(RequestStatus.PREFILLING)
             req = state.request
             first, blob, dt = e.prefill_request(seq)
+            if self.charge is not None:
+                dt = self.charge.prefill([len(seq.tokens) - seq.prefix_hit])
+            if self.tracer.enabled:
+                self.tracer.phase(seq.rid, "prefilling", now, f"engine{i}")
+                self.tracer.complete(
+                    "compute", "prefill_batch", now, now + dt,
+                    f"engine{i}", rid=seq.rid,
+                    tokens=len(seq.tokens) - seq.prefix_hit,
+                    hit=seq.prefix_hit)
             seq.append_token(first)
             req.first_token = now + dt
             self._emit_token(state, first, now + dt)
@@ -712,14 +812,24 @@ class ColocatedCluster(_LiveBackend):
                 self._finish_state(state, now + dt)
             else:
                 state.to_status(RequestStatus.DECODING)
+                if self.tracer.enabled:
+                    self.tracer.phase(seq.rid, "decoding", now + dt,
+                                      f"engine{i}")
                 self._active[i].append(seq)
             self._free_at[i] = now + dt
             self._ev.push(now + dt, "poke", i)
             return
         if self._active[i]:
             batch2 = self._active[i]
+            ctx_tokens = sum(len(s.tokens) - 1 for s in batch2)
             dt = e.decode_step(batch2)
+            if self.charge is not None:
+                dt = self.charge.decode(len(batch2), ctx_tokens)
             done_t = now + dt
+            if self.tracer.enabled:
+                self.tracer.complete("step", "decode_step", now, done_t,
+                                     f"engine{i}", batch=len(batch2),
+                                     compute=dt)
             still = []
             for seq in batch2:
                 state = self._states[seq.rid]

@@ -141,6 +141,8 @@ class Engine:
         self.prefill_tokens = 0               # tokens actually computed
         self.prefix_hit_tokens = 0            # tokens served from the tree
         self.decode_tokens = 0
+        self.fused_dispatches = 0             # prefix_prefill kernel calls
+        self.chunk_dispatches = 0             # chunked-prefill kernel calls
         if self.paged:
             pps = -(-max_len // page_size)
             # default pool: dense-slab-equivalent capacity + trash page 0
@@ -175,6 +177,27 @@ class Engine:
             def _decode(params, cache, tokens):
                 return self.model.decode_step(params, cache, tokens)
         self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
+
+    def stats(self) -> Dict[str, float]:
+        """Pull-collector snapshot for a `MetricsRegistry`: cumulative
+        dispatch counters plus page-pool occupancy and prefix-tree state
+        when paged/prefix-caching."""
+        out: Dict[str, float] = {
+            "clock_s": self.clock, "steps": self.steps,
+            "prefill_tokens": self.prefill_tokens,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "decode_tokens": self.decode_tokens,
+            "fused_dispatches": self.fused_dispatches,
+            "chunk_dispatches": self.chunk_dispatches,
+            "slots_free": len(self._slot_free),
+            "partial_prefills": len(self._partial),
+        }
+        if self._kv is not None:
+            out.update(self._kv.stats())
+        if self.prefix_caching:
+            for k, v in self.prefix_cache.metrics().items():
+                out[f"prefix.{k}"] = v
+        return out
 
     # ---- cache plumbing ------------------------------------------------
     def _empty_cache(self):
@@ -410,6 +433,7 @@ class Engine:
         if fused:
             # fused hot path: queries attend over the context pages in
             # place (prefix_prefill kernel) — no dense gather at all
+            self.fused_dispatches += 1
             table = self._padded_page_ids(ctx_pages, npb)[None]
             pools = {k: v for k, v in self._cache.items()
                      if k.startswith("seg")}
@@ -625,6 +649,7 @@ class Engine:
         self.clock += dt
         self.steps += 1
         self.prefill_tokens += c
+        self.chunk_dispatches += 1
         st.done = ctx + c
         st.chunks += 1
         seq.prefilled = st.done

@@ -101,6 +101,19 @@ class KVCacheManager:
     def peak_used_pages(self) -> int:
         return self.peak_used
 
+    def stats(self) -> Dict[str, float]:
+        """Pull-collector snapshot for a `MetricsRegistry`: occupancy,
+        reservations, and sharing (refcount > 1 means a page appears in
+        several block tables / the prefix tree)."""
+        shared = sum(1 for c in self._refcnt.values() if c > 1)
+        return {"kv.num_pages": self.num_pages,
+                "kv.used_pages": self.used_pages,
+                "kv.free_pages": self.free_pages,
+                "kv.peak_used_pages": self.peak_used,
+                "kv.reserved_pages": self._reserved,
+                "kv.shared_pages": shared,
+                "kv.tables": len(self._tables)}
+
     def pages_for(self, n_tokens: int) -> int:
         """Whole pages covering `n_tokens` positions (clamped to max_len)."""
         n = min(max(n_tokens, 1), self.max_len)

@@ -235,3 +235,10 @@ class RadixPrefixCache:
 
     def num_pages(self) -> int:
         return len(self.pages_in_tree())
+
+    def metrics(self) -> Dict[str, float]:
+        """Pull-collector snapshot for a `MetricsRegistry`: cumulative
+        hit/insert/evict counters plus the live tree footprint."""
+        out = {k: float(v) for k, v in self.stats.as_dict().items()}
+        out["pages_in_tree"] = float(self.num_pages())
+        return out
