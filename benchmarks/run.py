@@ -20,8 +20,9 @@ import time
 import traceback
 
 BENCH_SCHEMA = 2
-PR = 8
-HEADLINE = ("roofline", "paged_kv", "prefix_cache", "serving_api", "chunked")
+PR = 9
+HEADLINE = ("roofline", "paged_kv", "prefix_cache", "serving_api", "chunked",
+            "router")
 
 
 def git_sha() -> str:
@@ -88,14 +89,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig4,fig8,fig9,fig11,fig12,"
                          "table2,roofline,paged_kv,prefix_cache,serving_api,"
-                         "chunked")
+                         "chunked,router")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--bench-out", default=f"BENCH_{PR}.json")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (chunked_prefill, fig1, fig2, fig4, fig8, fig11, fig12,
-                   paged_kv, prefix_cache, roofline, serving_api, table2)
+                   paged_kv, prefix_cache, roofline, router, serving_api,
+                   table2)
     from .common import emit
 
     n_req = 150 if args.quick else 250
@@ -137,6 +139,8 @@ def main() -> None:
     if not only or "chunked" in only:
         jobs.append(("chunked",
                      lambda: chunked_prefill.run(quick=args.quick)))
+    if not only or "router" in only:
+        jobs.append(("router", lambda: router.run(quick=args.quick)))
     if not only or "roofline" in only:
         jobs.append(("roofline", roofline.run))
 

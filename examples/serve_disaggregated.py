@@ -125,6 +125,40 @@ def chunked_demo(cfg, params):
     assert identical, "chunked prefill must be token-identical"
 
 
+def fleet_demo(cfg, params):
+    """Fleet router: two live replicas behind prefix-affinity routing with
+    tight overload gates — a burst overflows the router queue, so some
+    requests are shed (finish_reason "shed", no tokens) while the admitted
+    ones stream normally; routing decisions and per-replica stats print."""
+    from repro.serving.router import FleetRouter, OverloadDetector
+
+    tracker = SLOTracker(SPEC)
+    backends = [DisaggCluster(cfg, params, n_prefill=1, n_decode=1,
+                              max_batch=2, max_len=96, lm_tokens=64,
+                              prefix_cache=True, seed=i)
+                for i in range(2)]
+    router = FleetRouter(backends, policy="prefix_affinity",
+                         detector=OverloadDetector(max_inflight=2,
+                                                   max_queue=3),
+                         tracker=tracker)
+    burst = chat_trace(cfg, n=10, seed=3)
+    for i, r in enumerate(burst):        # compress arrivals into a burst
+        r.arrive = i * 0.002
+    handles = [router.submit(r) for r in burst]
+    router.drain()
+    shed = [h for h in handles if h.result().finish_reason == "shed"]
+    served = [h for h in handles if h.result().finish_reason != "shed"]
+    assert all(not h.result().tokens for h in shed), "shed ran no work"
+    routes = [d for d in router.decisions if d[0] == "route"]
+    print(f"fleet        served={len(served)}  shed={len(shed)}  "
+          f"routes={[(rid, rep) for _, rid, rep, _ in routes]}")
+    for i, rep in enumerate(router.replicas):
+        print(f"  replica{i}: routed={rep.routed} finished={rep.finished}")
+    s = tracker.summary()
+    print(f"  fleet SLO: attain={s['attain']:.2f}  "
+          f"finished={s['finished']:.0f} shed={s['shed']:.0f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b-smoke")
@@ -187,7 +221,10 @@ def main():
     # 4. chunked prefill: HOL relief + per-chunk streaming migration
     chunked_demo(cfg, params)
 
-    # 5. failover drill: kill decode instance 1 at t=0.1s
+    # 5. fleet router: two replicas, prefix-affinity routing, shed on burst
+    fleet_demo(cfg, params)
+
+    # 6. failover drill: kill decode instance 1 at t=0.1s
     t = trace()
     ft = DisaggCluster(cfg, params, n_prefill=1, n_decode=2,
                        max_batch=4, max_len=96, lm_tokens=64)

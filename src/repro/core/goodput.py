@@ -53,6 +53,7 @@ class SLOReport:
     finished: int = 0
     cancelled: int = 0
     failed: int = 0
+    shed: int = 0               # router load-shed (finish_reason "shed")
     ttft_ok: int = 0
     tpot_ok: int = 0
     both_ok: int = 0
@@ -114,9 +115,14 @@ class SLOTracker:
         n = self._itl_n.pop(rid, 0)
         tpot = self._itl_sum.pop(rid, 0.0) / n if n else 0.0
         self._last_t.pop(rid, None)
-        from ..serving.api import RequestStatus
+        from ..serving.api import FINISH_SHED, RequestStatus
         if state.status is RequestStatus.CANCELLED:
-            self._report.cancelled += 1
+            # shed requests never entered service; count them apart from
+            # user cancels so a router sweep can report shed rate directly
+            if state.finish_reason == FINISH_SHED:
+                self._report.shed += 1
+            else:
+                self._report.cancelled += 1
             return
         if state.status is RequestStatus.FAILED:
             self._report.failed += 1
@@ -160,7 +166,7 @@ class SLOTracker:
     def summary(self) -> Dict[str, float]:
         rep = self.report()
         return {"finished": rep.finished, "cancelled": rep.cancelled,
-                "failed": rep.failed,
+                "failed": rep.failed, "shed": rep.shed,
                 "ttft_attain": round(rep.ttft_attain, 4),
                 "tpot_attain": round(rep.tpot_attain, 4),
                 "attain": round(rep.attain, 4),

@@ -237,6 +237,10 @@ class _SimBackend(BackendBase):
             return False
         return super().step()
 
+    def next_time(self):
+        nxt = self._ev.peek_time()
+        return None if nxt is None or nxt > self.horizon else nxt
+
     def _forget(self, rid: int):
         super()._forget(rid)
         self._out_cap.pop(rid, None)

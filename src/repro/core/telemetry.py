@@ -144,20 +144,45 @@ class Tracer:
     next; re-entering the same phase+lane is a no-op, which is what chunked
     prefill's re-queue does); `finish_phase` closes the open phase with a
     terminal `SpanEvent` (``FINISHED`` / ``CANCELLED`` / ``FAILED``).
+
+    `sample_rate` < 1.0 turns on per-request trace sampling for fleet-scale
+    runs: sampled requests keep every span, unsampled ones go instants-only
+    (tokens, routing decisions, terminals still land; their per-request
+    spans are created but never retained). The decision is a deterministic
+    rid hash — no RNG — so the same request samples identically in the
+    simulator and on the live cluster, and sampling can never perturb
+    tokens, timings, or routing (it only filters what is *recorded*).
+    Spans without a rid (decode step spans, batch-level compute) are
+    instance-scoped, not request-scoped, and are always kept.
     """
     enabled = True
 
-    def __init__(self):
+    def __init__(self, sample_rate: float = 1.0, sample_seed: int = 0):
         self.spans: List[Span] = []
         self.instants: List[Instant] = []
         self.terminals: Dict[int, Tuple[str, float]] = {}
         self._open_phase: Dict[int, Span] = {}
+        self.sample_rate = float(sample_rate)
+        self.sample_seed = int(sample_seed)
+
+    def sampled(self, rid: Optional[int]) -> bool:
+        """Per-request keep-all decision (deterministic rid hash)."""
+        if rid is None or self.sample_rate >= 1.0:
+            return True
+        if self.sample_rate <= 0.0:
+            return False
+        x = (rid * 0x9E3779B9 + self.sample_seed * 0x85EBCA6B) & 0xFFFFFFFF
+        x ^= x >> 16
+        x = (x * 0x45D9F3B) & 0xFFFFFFFF
+        x ^= x >> 16
+        return x / 2.0 ** 32 < self.sample_rate
 
     # -- explicit spans -------------------------------------------------
     def begin(self, cat: str, name: str, t: float, lane: str,
               rid: Optional[int] = None, **args) -> Span:
         sp = Span(cat, name, lane, t, rid=rid, args=args)
-        self.spans.append(sp)
+        if self.sampled(rid):
+            self.spans.append(sp)
         return sp
 
     def end(self, span: Span, t: float, **args):
@@ -183,6 +208,8 @@ class Tracer:
 
     # -- per-request phase state machine --------------------------------
     def phase(self, rid: int, name: str, t: float, lane: str, **args):
+        if not self.sampled(rid):
+            return
         cur = self._open_phase.get(rid)
         if cur is not None:
             if cur.name == name and cur.lane == lane:
@@ -193,6 +220,8 @@ class Tracer:
 
     def finish_phase(self, rid: int, t: float, terminal: str):
         self.terminals[rid] = (terminal, t)
+        if not self.sampled(rid):
+            return
         cur = self._open_phase.pop(rid, None)
         if cur is None:                         # e.g. cancel pre-arrival
             self.event(terminal, t, rid=rid)
@@ -303,12 +332,14 @@ def _prom_name(name: str) -> str:
 class Attribution:
     """Where one request's latency went, decomposed from its spans.
 
-    TTFT = queue + prefill_compute + prefill_stall (chunk round-robin waits
-    between this prompt's chunks).  Decode startup (first-token -> first
-    decode iteration) = migrate + admit.  TPOT decomposes each inter-token
-    gap into the emitting decode step's pure compute vs batch-wait (queueing
-    behind other members' steps, KV-stream pipelining stalls, and — on
-    colocated engines — prefill interference).
+    TTFT = router_queue + queue + prefill_compute + prefill_stall (chunk
+    round-robin waits between this prompt's chunks); router_queue is the
+    time a fleet router held the request before dispatching it to a
+    replica (0 when no router is in the path).  Decode startup
+    (first-token -> first decode iteration) = migrate + admit.  TPOT
+    decomposes each inter-token gap into the emitting decode step's pure
+    compute vs batch-wait (queueing behind other members' steps, KV-stream
+    pipelining stalls, and — on colocated engines — prefill interference).
     """
     rid: int
     arrive: float
@@ -323,9 +354,11 @@ class Attribution:
     decode_compute_s: float
     decode_wait_s: float
     terminal: str = "FINISHED"
+    router_queue_s: float = 0.0
 
     def ttft_parts(self) -> Dict[str, float]:
-        return {"queue": self.queue_s,
+        return {"router_queue": self.router_queue_s,
+                "queue": self.queue_s,
                 "prefill_compute": self.prefill_compute_s,
                 "prefill_stall": self.prefill_stall_s}
 
@@ -345,7 +378,8 @@ class Attribution:
 
     def format(self) -> str:
         return (f"rid={self.rid} ttft={self.ttft:.4f}s "
-                f"(queue={self.queue_s:.4f} "
+                f"(router={self.router_queue_s:.4f} "
+                f"queue={self.queue_s:.4f} "
                 f"prefill={self.prefill_compute_s:.4f} "
                 f"stall={self.prefill_stall_s:.4f}) "
                 f"startup(migrate={self.migrate_s:.4f} "
@@ -370,6 +404,7 @@ def attribute_request(tracer: Tracer, rid: int) -> Optional[Attribution]:
     def phase_dur(name: str) -> float:
         return sum(s.dur for s in phases if s.name == name and not s.open)
 
+    router_queue_s = phase_dur("router_queued")
     queue_s = phase_dur("queued")
     prefill_s = phase_dur("prefilling")
     compute_s = sum(s.dur for s in tracer.for_rid(rid)
@@ -405,7 +440,8 @@ def attribute_request(tracer: Tracer, rid: int) -> Optional[Attribution]:
         wait += gap - c
     terminal, _ = tracer.terminals.get(rid, ("FINISHED", 0.0))
     return Attribution(rid, arrive, ttft, tpot, n, queue_s, compute_s,
-                       stall_s, migrate_s, admit_s, compute, wait, terminal)
+                       stall_s, migrate_s, admit_s, compute, wait, terminal,
+                       router_queue_s=router_queue_s)
 
 
 # ---------------------------------------------------------------------------

@@ -24,10 +24,12 @@ _OP_RE = re.compile(
 _NAME_RE = re.compile(r'op_name="([^"]+)"')
 
 
-def serve_metrics(arch: str) -> None:
-    """Smoke serving run with the metrics registry attached; dumps the
-    Prometheus text snapshot (engine/queue/transfer pull-collectors plus
-    the request counters and latency histograms)."""
+def serve_metrics(arch: str, replicas: int = 2) -> None:
+    """Smoke fleet serving run with metrics registries attached; dumps the
+    router's Prometheus snapshot (queue depth, shed count, per-replica
+    inflight) followed by per-replica snapshots prefixed ``replicaN.`` and
+    their ``fleet.``-summed totals (engine/queue/transfer pull-collectors
+    plus the request counters and latency histograms)."""
     import jax
     import numpy as np
     from ..configs import get_config
@@ -35,16 +37,34 @@ def serve_metrics(arch: str) -> None:
     from ..core.workload import Request
     from ..models.api import build_model
     from ..serving.cluster import DisaggCluster
+    from ..serving.router import (FleetRouter, OverloadDetector,
+                                  aggregate_snapshots)
 
     cfg = get_config(arch)
     params = build_model(cfg).init(jax.random.PRNGKey(0))
-    metrics = MetricsRegistry()
-    dc = DisaggCluster(cfg, params, n_prefill=1, n_decode=1, max_batch=4,
-                       max_len=96, lm_tokens=64, metrics=metrics)
+    regs = [MetricsRegistry() for _ in range(replicas)]
+    backends = [DisaggCluster(cfg, params, n_prefill=1, n_decode=1,
+                              max_batch=4, max_len=96, lm_tokens=64,
+                              metrics=regs[i], seed=i)
+                for i in range(replicas)]
+    router_metrics = MetricsRegistry()
+    # tight gates so the smoke burst exercises router queueing + shedding
+    router = FleetRouter(backends, policy="shortest_queue",
+                         detector=OverloadDetector(max_inflight=2,
+                                                   max_queue=4),
+                         metrics=router_metrics)
     rng = np.random.default_rng(0)
-    dc.run([Request(i, i * 0.01, int(rng.integers(8, 40)),
-                    int(rng.integers(4, 8))) for i in range(8)])
-    print(metrics.prometheus(), end="")
+    for i in range(10):
+        router.submit(Request(i, i * 0.005, int(rng.integers(8, 40)),
+                              int(rng.integers(4, 8))))
+    router.drain()
+    print(router_metrics.prometheus(), end="")
+    agg = aggregate_snapshots({f"replica{i}": regs[i].snapshot()
+                               for i in range(replicas)})
+    fleet = MetricsRegistry()
+    for k, v in agg.items():
+        fleet.gauge(k, v)
+    print(fleet.prometheus(), end="")
 
 
 def main():
@@ -56,13 +76,16 @@ def main():
     ap.add_argument("--opt", default="")
     ap.add_argument("--top", type=int, default=15)
     ap.add_argument("--serve-metrics", action="store_true",
-                    help="run a smoke serving workload and dump a "
-                         "Prometheus-style metrics snapshot instead of "
-                         "the collectives report")
+                    help="run a smoke fleet serving workload and dump "
+                         "Prometheus-style metrics snapshots (router + "
+                         "per-replica + fleet-summed) instead of the "
+                         "collectives report")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="fleet size for --serve-metrics")
     args = ap.parse_args()
 
     if args.serve_metrics:
-        serve_metrics(args.arch)
+        serve_metrics(args.arch, replicas=args.replicas)
         return
     if not args.shape:
         ap.error("--shape is required unless --serve-metrics is given")

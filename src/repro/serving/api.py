@@ -85,6 +85,7 @@ FINISH_LENGTH = "length"        # produced out_len tokens
 FINISH_STOP = "stop"            # hit a SamplingParams.stop token id
 FINISH_CANCELLED = "cancelled"  # cancel() mid-flight
 FINISH_FAILED = "failed"        # instance failure with no recovery
+FINISH_SHED = "shed"            # load-shed by a router before any work ran
 
 
 def percentile(xs, q: float) -> float:
@@ -172,7 +173,8 @@ class RequestState:
         self.request.finish = t
         self.request.finish_reason = reason
         self.finish_reason = reason
-        self.status = (RequestStatus.CANCELLED if reason == FINISH_CANCELLED
+        self.status = (RequestStatus.CANCELLED
+                       if reason in (FINISH_CANCELLED, FINISH_SHED)
                        else RequestStatus.FAILED if reason == FINISH_FAILED
                        else RequestStatus.FINISHED)
 
@@ -336,6 +338,12 @@ class BackendBase:
     def now(self) -> float:
         return self._ev.now
 
+    def next_time(self) -> Optional[float]:
+        """Timestamp of the next event this backend would process, or None
+        when idle (simulator backends clamp this to their horizon). A
+        fleet router interleaves replicas by this clock."""
+        return self._ev.peek_time()
+
     @property
     def states(self) -> Dict[int, RequestState]:
         return self._states
@@ -465,7 +473,8 @@ class BackendBase:
     def _observe_metrics(self, state: RequestState):
         m, req, n = self.metrics, state.request, len(state.events)
         if state.status is RequestStatus.CANCELLED:
-            m.counter("requests_cancelled")
+            m.counter("requests_shed" if state.finish_reason == FINISH_SHED
+                      else "requests_cancelled")
         elif state.status is RequestStatus.FAILED:
             m.counter("requests_failed")
         else:

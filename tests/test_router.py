@@ -1,0 +1,428 @@
+"""Fleet router: sim == live routing-decision identity on a pinned
+multi-turn trace, prefix-affinity locality beating shortest-queue,
+overload shedding protecting admitted-request attainment, leak-free
+shed/cancel fuzz across a live fleet, session stickiness, elastic
+replanning, and the ServingBackend protocol contract.
+
+The identity pin is the load-bearing one: the router's load signals are
+its own dispatch/harvest bookkeeping (never replica introspection), so a
+fleet of `SimDisaggBackend`s and a fleet of live `DisaggCluster`s (with
+the deterministic `EngineCharge`) must replay the same trace into the
+identical `decisions` list at float-identical times — the same
+discipline `DisaggDispatcher` pins inside one cluster.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.core.goodput import SLOTracker
+from repro.core.latency_model import EngineCharge, LatencyModel, Parallelism
+from repro.core.replan import Replanner
+from repro.core.simulator import InstanceConfig, SimDisaggBackend
+from repro.core.telemetry import MetricsRegistry, Tracer, attribute_request
+from repro.core.workload import (Request, WorkloadSpec, sample_multi_turn,
+                                 with_cancellations)
+from repro.models.api import build_model
+from repro.serving.api import (FINISH_SHED, RequestStatus, ServingBackend)
+from repro.serving.cluster import DisaggCluster
+from repro.serving.router import (FleetPlan, FleetRouter, OverloadDetector,
+                                  TokenHashTrie, aggregate_snapshots,
+                                  elastic_callback, make_policy)
+
+CFG = get_config("yi-6b-smoke")
+LM = LatencyModel(CFG, hw.V5E)      # smoke scale: paired with live clusters
+LM_FULL = LatencyModel(get_config("yi-6b"), hw.V5E)     # sim-only fleets
+PAR = Parallelism(1, 1)
+SLOW_BW = 1e3
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def _assert_no_leaks(dc: DisaggCluster):
+    """Allocator invariants after drain (same checker as
+    test_serving_api): every page free xor refcounted, only the prefix
+    tree may retain pages, all batch slots back, nothing parked."""
+    assert not dc.tx.parked, "parked transfers leaked"
+    for e in (*dc.prefill, *dc.decode):
+        assert len(e._slot_free) == e.max_batch, "batch slot leaked"
+        if e._kv is None:
+            continue
+        kv = e._kv
+        free = set(kv._free)
+        assert len(free) + len(kv._refcnt) == kv.num_pages - 1
+        assert free.isdisjoint(kv._refcnt)
+        tree_pages = (e.prefix_cache.pages_in_tree()
+                      if e.prefix_caching else [])
+        assert free.isdisjoint(tree_pages)
+        assert kv.used_pages == len(set(tree_pages))
+        assert not kv._tables, f"block tables leaked: {kv._tables}"
+
+
+def _sim_fleet(n, **kw):
+    kw.setdefault("lm_tokens", 2048)
+    kw.setdefault("max_decode_batch", 32)
+    kw.setdefault("prefix_cache", True)
+    return [SimDisaggBackend(LM_FULL, InstanceConfig(PAR, 1),
+                             InstanceConfig(PAR, 1), **kw)
+            for _ in range(n)]
+
+
+SKEWED = WorkloadSpec("fleet-chat", 4.6, 0.5, (32, 768), 3.4, 0.5, (8, 64),
+                      slo_ttft=0.6, slo_tpot=0.1,
+                      sys_len=256, turns=4, share=0.9)
+
+
+def _skewed_trace(rate, n, seed=7):
+    return sample_multi_turn(SKEWED, rate=rate, n=n, seed=seed,
+                             vocab=CFG.vocab_size, think_s=2.0)
+
+
+# ---------------- protocol + trie units ------------------------------------
+
+def test_router_satisfies_protocol():
+    router = FleetRouter(_sim_fleet(2))
+    assert isinstance(router, ServingBackend)
+
+
+def test_trie_match_insert_drop():
+    trie = TokenHashTrie(page_tokens=4)
+    a = list(range(12))                 # 3 pages
+    trie.insert(a, replica=0)
+    trie.insert(a[:8] + [99, 98, 97, 96], replica=1)    # shares 2 pages
+    hits = trie.match(a)
+    assert hits[0] == 12 and hits[1] == 8
+    assert trie.match(a[:7]) == {0: 4, 1: 4}    # sub-page tail ignored
+    assert trie.match([5, 5, 5, 5]) == {}
+    trie.drop_replica(0)
+    assert 0 not in trie.match(a)
+    assert trie.match(a)[1] == 8
+
+
+def test_trie_eviction_bounds_nodes():
+    trie = TokenHashTrie(page_tokens=1, max_nodes=64)
+    for i in range(200):
+        trie.insert([i, i + 1000], replica=0)
+    assert trie.nodes <= 64
+    # recently-inserted prefixes survive the LRU pruning
+    assert trie.match([199, 1199])
+
+
+# ---------------- acceptance (a): sim == live decisions --------------------
+
+def _pinned_fleet_trace():
+    """Two interleaved 3-turn sessions with explicit token ids (growing
+    shared history), arrivals far enough apart that both worlds see the
+    same queue states at every decision point."""
+    rng = np.random.default_rng(42)
+    reqs = []
+    for sess in range(2):
+        prompt = tuple(int(x) for x in rng.integers(1, CFG.vocab_size, 32))
+        for turn in range(3):
+            user = tuple(int(x) for x in rng.integers(1, CFG.vocab_size, 16))
+            prompt = prompt + user
+            reqs.append(Request(sess * 3 + turn, sess * 7.0 + turn * 60.0,
+                                len(prompt), 4, tokens=prompt))
+            prompt = prompt + (7, 7, 7, 7)
+    reqs.sort(key=lambda r: r.arrive)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def _run_fleet(backends):
+    router = FleetRouter(backends, policy="prefix_affinity",
+                         detector=OverloadDetector(max_inflight=2))
+    for r in _pinned_fleet_trace():
+        router.submit(r)
+    return router, router.drain()
+
+
+def test_sim_vs_live_routing_decisions_identical(params):
+    live = [DisaggCluster(CFG, params, n_prefill=1, n_decode=1, max_batch=2,
+                          max_len=256, lm_tokens=128, chunk_tokens=32,
+                          transfer_bandwidth=SLOW_BW, prefix_cache=True,
+                          charge=EngineCharge(LM, PAR), seed=i)
+            for i in range(2)]
+    sim = [SimDisaggBackend(LM, InstanceConfig(PAR, 1),
+                            InstanceConfig(PAR, 1), transfer_bw=SLOW_BW,
+                            lm_tokens=128, chunk_tokens=32,
+                            prefix_cache=True)
+           for _ in range(2)]
+    rl, resl = _run_fleet(live)
+    rs, ress = _run_fleet(sim)
+    assert rl.decisions, "trace produced no routing decisions"
+    assert rl.decisions == rs.decisions
+    # affinity actually fired: later turns rode their session's replica
+    assert any(hit > 0 for kind, _, _, hit in rl.decisions
+               if kind == "route")
+    assert set(resl) == set(ress)
+    for rid in resl:
+        assert resl[rid].ttft == ress[rid].ttft, rid
+        assert resl[rid].finish == ress[rid].finish, rid
+        assert resl[rid].finish_reason == ress[rid].finish_reason
+    for dc in live:
+        _assert_no_leaks(dc)
+
+
+# ---------------- acceptance (b): affinity wins on hit rate ----------------
+
+def _hit_rate(policy):
+    reqs = [dataclasses.replace(r) for r in _skewed_trace(rate=40.0, n=240)]
+    router = FleetRouter(_sim_fleet(4), policy=policy,
+                         detector=OverloadDetector(max_inflight=24))
+    for r in reqs:
+        router.submit(r)
+    router.drain()
+    served = [r for r in reqs if r.finish_reason == "length"]
+    assert len(served) == len(reqs)
+    return sum(r.prefix_hit for r in served) / sum(r.in_len for r in served)
+
+
+def test_prefix_affinity_beats_shortest_queue_on_hit_rate():
+    aff, sq = _hit_rate("prefix_affinity"), _hit_rate("shortest_queue")
+    assert aff > sq + 0.05, (aff, sq)
+    assert aff > 0.3        # the skewed trace is genuinely cacheable
+
+
+# ---------------- acceptance (c): shedding protects attainment -------------
+
+def _overloaded_run(detector, reqs):
+    reqs = [dataclasses.replace(r) for r in reqs]
+    tracker = SLOTracker(SKEWED)
+    router = FleetRouter(_sim_fleet(2), policy="shortest_queue",
+                         detector=detector, tracker=tracker)
+    for r in reqs:
+        router.submit(r)
+    router.drain()
+    return router, tracker.report(), reqs
+
+
+def test_shed_under_overload_beats_no_shed_attainment():
+    reqs = _skewed_trace(rate=160.0, n=240, seed=11)
+    shed_det = OverloadDetector.from_slo(SKEWED.slo_ttft, headroom=0.5,
+                                         max_inflight=8)
+    r_shed, rep_shed, reqs_s = _overloaded_run(shed_det, reqs)
+    r_none, rep_none, _ = _overloaded_run(
+        OverloadDetector(max_inflight=8), reqs)
+    assert r_shed.shed_count > 0 and r_none.shed_count == 0
+    assert rep_shed.shed == r_shed.shed_count    # tracker counts them apart
+    # admitted requests keep materially higher SLO attainment
+    assert rep_shed.attain > rep_none.attain + 0.1, \
+        (rep_shed.attain, rep_none.attain)
+    # shed = leak-free cancel before any work: no tokens, terminal status
+    for rid, res in r_shed.results.items():
+        if res.finish_reason == FINISH_SHED:
+            assert not res.tokens
+    assert all(r_shed.states[rid].status is RequestStatus.CANCELLED
+               for rid in r_shed.results
+               if r_shed.results[rid].finish_reason == FINISH_SHED)
+
+
+# ---------------- satellite: shed/cancel fuzz over a live fleet ------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fleet_shed_cancel_fuzz_no_leaks(params, seed):
+    """Seeded fuzz: a live 2-replica fleet under a burst with mid-flight
+    cancellations and tight overload gates (router queueing + shedding
+    both exercised). Every replica must pass the allocator-invariant
+    checker, every request must go terminal, and the router tracer's
+    spans must conserve (no span left open, a terminal per request)."""
+    spec = WorkloadSpec("fuzz", 2.2, 0.4, (4, 24), 1.6, 0.3, (3, 8),
+                        slo_ttft=1.0, slo_tpot=1.0,
+                        sys_len=16, turns=2, share=0.8)
+    reqs = sample_multi_turn(spec, rate=2.0, n=10, seed=seed,
+                             vocab=CFG.vocab_size, think_s=30.0)
+    rng = np.random.default_rng(seed)
+    for i, r in enumerate(reqs):        # burst-compress to force queueing
+        r.arrive = i * 0.002
+    reqs = with_cancellations(reqs, frac=0.3, seed=seed + 5,
+                              mean_wait_s=0.02)
+    tracer = Tracer()
+    fleet = [DisaggCluster(CFG, params, n_prefill=1, n_decode=1,
+                           max_batch=2, max_len=96, lm_tokens=64,
+                           prefix_cache=True, seed=i)
+             for i in range(2)]
+    router = FleetRouter(
+        fleet, policy="prefix_affinity", tracer=tracer,
+        detector=OverloadDetector(max_inflight=2, max_queue=3,
+                                  shed_after_s=0.05))
+    for r in reqs:
+        router.submit(r)
+    res = router.drain()
+    assert set(res) == {r.rid for r in reqs}, "requests lost"
+    for rid, r in res.items():
+        assert router.states[rid].done
+        if r.finish_reason == FINISH_SHED:
+            assert not r.tokens
+    for dc in fleet:
+        _assert_no_leaks(dc)
+    # span conservation on the router tracer
+    assert tracer.open_spans() == []
+    assert set(tracer.terminals) == set(res)
+    kinds = {k for k, *_ in router.decisions}
+    assert "route" in kinds     # fuzz exercised actual routing too
+
+
+# ---------------- session affinity + router-queue attribution --------------
+
+def test_session_affinity_is_sticky():
+    reqs = _skewed_trace(rate=30.0, n=60)
+    router = FleetRouter(_sim_fleet(3), policy="session",
+                         detector=OverloadDetector(max_inflight=32))
+    for r in [dataclasses.replace(r) for r in reqs]:
+        router.submit(r)
+    router.drain()
+    routed = {rid: rep for kind, rid, rep, _ in router.decisions
+              if kind == "route"}
+    by_head = {}
+    for r in reqs:
+        by_head.setdefault(tuple(r.tokens[:16]), set()).add(routed[r.rid])
+    multi = [v for v in by_head.values() if len(v) > 1]
+    assert not multi, f"sessions split across replicas: {multi}"
+    assert len({next(iter(v)) for v in by_head.values()}) > 1, \
+        "stickiness degenerated to a single replica"
+
+
+def test_router_queue_wait_is_attributed():
+    """With one deliberately saturated replica, a queued request's TTFT
+    attribution must carry the router wait as its own term."""
+    tracer = Tracer()
+    # replicas share the router's tracer: the replica's own queued phase
+    # closes router_queued, so the TTFT terms tile with no gap
+    router = FleetRouter(_sim_fleet(1, tracer=tracer),
+                         policy="shortest_queue",
+                         detector=OverloadDetector(max_inflight=1),
+                         tracer=tracer)
+    t0 = Request(0, 0.0, 512, 32)
+    t1 = Request(1, 0.001, 64, 8)       # arrives while 0 occupies the gate
+    router.submit(t0)
+    router.submit(t1)
+    router.drain()
+    att = attribute_request(tracer, 1)
+    assert att.router_queue_s > 0.0
+    assert "router_queue" in att.ttft_parts()
+    assert abs(sum(att.ttft_parts().values()) - att.ttft) < 1e-6
+
+
+def test_shed_deadline_fires_from_ttft_headroom():
+    det = OverloadDetector.from_slo(0.4, headroom=0.5, max_inflight=1)
+    assert det.shed_after_s == pytest.approx(0.2)
+    router = FleetRouter(_sim_fleet(1), policy="least_loaded", detector=det)
+    router.submit(Request(0, 0.0, 4096, 256))       # hogs the only replica
+    router.submit(Request(1, 0.001, 64, 8))         # queues past deadline
+    res = router.drain()
+    assert res[1].finish_reason == FINISH_SHED
+    assert res[1].finish == pytest.approx(0.001 + 0.2)
+    assert res[0].finish_reason == "length"
+
+
+# ---------------- cancellation through the router --------------------------
+
+def test_cancel_routed_and_queued_requests():
+    router = FleetRouter(_sim_fleet(1), policy="least_loaded",
+                         detector=OverloadDetector(max_inflight=1))
+    h0 = router.submit(Request(0, 0.0, 1024, 128))
+    h1 = router.submit(Request(1, 0.001, 64, 8))    # router-queued
+    router.run_until(0.01)
+    router.cancel(0, router.now)        # routed: delegates to the replica
+    router.cancel(1, router.now)        # queued: router releases the slot
+    router.drain()
+    assert h0.status is RequestStatus.CANCELLED
+    assert h1.status is RequestStatus.CANCELLED
+    assert h1.result().tokens == []
+    assert not router._rqueue.items and not router._routed
+
+
+# ---------------- elastic replanning ---------------------------------------
+
+def test_elastic_replan_grows_fleet_on_drift():
+    """Workload drift through the router's `Replanner` fires `on_replan`,
+    and `elastic_callback` grows the fleet to the plan's replica count
+    (idempotent if drift triggers more than once)."""
+    fired = []
+    router = FleetRouter(
+        _sim_fleet(1), policy="least_loaded",
+        replanner=Replanner(lambda spec, rate: FleetPlan(3, rate, 1.0),
+                            slo_ttft=0.4, slo_tpot=0.1, check_every=16),
+        on_replan=lambda rt, plan: (
+            fired.append(plan),
+            elastic_callback(lambda i: _sim_fleet(1)[0])(rt, plan)))
+    # phase 1: steady 10/s short prompts (sets the profiler baseline)
+    rid = 0
+    for i in range(32):
+        router.submit(Request(rid, rid * 0.1, 32, 4)); rid += 1
+    router.drain()
+    assert not fired and router.fleet_size == 1
+    # phase 2: rate x4 with 8x prompts -> drift -> replan -> grow to 3
+    t = rid * 0.1
+    for i in range(32):
+        router.submit(Request(rid, t + i * 0.025, 256, 4)); rid += 1
+    router.drain()
+    assert fired and all(p.replicas == 3 for p in fired)
+    assert router.fleet_size == 3 and len(router.replicas) == 3
+    assert len(router.results) == rid           # growth lost nothing
+    for rep in router.replicas:
+        assert rep.inflight == 0 and not rep.rids
+
+
+def test_elastic_callback_shrinks_newest_first():
+    router = FleetRouter(_sim_fleet(3), policy="least_loaded")
+    elastic_callback(lambda i: _sim_fleet(1)[0])(router, FleetPlan(1, 0, 1.0))
+    assert router.fleet_size == 1
+    assert router.replicas[0].routable          # oldest survives
+    assert all(not r.alive for r in router.replicas[1:])   # idle -> dead
+
+
+def test_drain_replica_finishes_inflight_then_dies():
+    router = FleetRouter(_sim_fleet(2), policy="least_loaded")
+    h = router.submit(Request(0, 0.0, 256, 16))
+    router.run_until(1e-4)              # routed, still in flight
+    src = router._routed[0]
+    router.drain_replica(src)
+    rep = router.replicas[src]
+    assert rep.draining and rep.alive   # still steppable
+    router.submit(Request(1, router.now + 1e-4, 64, 8))
+    res = router.drain()
+    assert res[0].finish_reason == "length"     # drained replica finished it
+    assert not rep.alive
+    routed1 = next(rep for k, rid, rep, _ in router.decisions
+                   if k == "route" and rid == 1)
+    assert routed1 != src               # nothing new routed to it
+
+
+# ---------------- metrics + aggregation ------------------------------------
+
+def test_router_metrics_and_fleet_aggregation():
+    metrics = MetricsRegistry()
+    router = FleetRouter(_sim_fleet(2), policy="shortest_queue",
+                         detector=OverloadDetector(max_inflight=1,
+                                                   max_queue=2),
+                         metrics=metrics)
+    for i in range(8):
+        router.submit(Request(i, i * 1e-4, 512, 16))
+    router.drain()
+    snap = metrics.snapshot()
+    assert snap["router.shed_total"] == router.shed_count > 0
+    assert snap["requests_shed"] == router.shed_count
+    assert snap["router.replicas_alive"] == 2.0
+    assert (snap["router.replica0.finished"]
+            + snap["router.replica1.finished"]
+            == len(router.results) - router.shed_count)
+
+    agg = aggregate_snapshots({"replica0": {"queue.depth": 2.0, "x": 1.0},
+                               "replica1": {"queue.depth": 3.0}})
+    assert agg["replica0.queue.depth"] == 2.0
+    assert agg["fleet.queue.depth"] == 5.0
+    assert agg["fleet.x"] == 1.0
+
+
+def test_make_policy_rejects_unknown():
+    with pytest.raises(KeyError):
+        make_policy("round_robin_nope")

@@ -404,3 +404,82 @@ def test_slo_tracker_annotates_violations(params):
         assert v.attribution is not None
         assert v.attribution.dominant_ttft in v.attribution.ttft_parts()
         assert "ttft" in v.format()
+
+
+# ---------------- per-request trace sampling -------------------------------
+
+def test_sampling_decision_is_deterministic_and_partial():
+    tr = Tracer(sample_rate=0.5, sample_seed=3)
+    picks = [tr.sampled(rid) for rid in range(400)]
+    assert picks == [tr.sampled(rid) for rid in range(400)]
+    frac = sum(picks) / len(picks)
+    assert 0.35 < frac < 0.65           # roughly the requested rate
+    # a different seed samples a different subset at the same rate
+    other = [Tracer(sample_rate=0.5, sample_seed=4).sampled(r)
+             for r in range(400)]
+    assert other != picks
+    assert all(Tracer(sample_rate=1.0).sampled(r) for r in range(32))
+    assert not any(Tracer(sample_rate=0.0).sampled(r) for r in range(32))
+    assert Tracer(sample_rate=0.0).sampled(None)    # rid-less: always kept
+
+
+def test_sampling_keeps_instants_and_terminals_drops_spans():
+    tr = Tracer(sample_rate=0.4, sample_seed=1)
+    sim = SimDisaggBackend(LM, InstanceConfig(PAR, 1),
+                           InstanceConfig(PAR, 1), tracer=tr)
+    reqs = [Request(i, i * 0.05, 32 + 8 * i, 5) for i in range(20)]
+    for r in reqs:
+        sim.submit(r)
+    sim.drain()
+    kept = {r.rid for r in reqs if tr.sampled(r.rid)}
+    assert 0 < len(kept) < len(reqs)    # both kinds present at this seed
+    for r in reqs:
+        if r.rid in kept:
+            assert tr.for_rid(r.rid), r.rid
+        else:
+            assert not tr.for_rid(r.rid), r.rid
+        # instants-only data survives for everyone: tokens + terminal
+        assert len(tr.tokens_for(r.rid)) == r.out_len
+        assert tr.terminals[r.rid][0] == "FINISHED"
+    assert tr.open_spans() == []
+    # the thinned trace still exports as a valid chrome trace
+    doc = to_chrome_trace(tr)
+    assert validate_chrome_trace(doc) == []
+
+
+def test_sampling_never_changes_tokens_or_routing():
+    """The satellite pin: sampling only filters what is recorded — a
+    fleet run at sample_rate 1.0 and 0.1 must produce identical tokens,
+    timings, and routing decisions."""
+    from repro.core.workload import sample_multi_turn
+    from repro.serving.router import FleetRouter, OverloadDetector
+
+    def fleet_run(rate):
+        spec = WorkloadSpec("s", 3.0, 0.4, (8, 64), 2.0, 0.3, (4, 16),
+                            slo_ttft=1.0, slo_tpot=1.0,
+                            sys_len=16, turns=2, share=0.8)
+        reqs = sample_multi_turn(spec, rate=50.0, n=40, seed=9,
+                                 vocab=1000, think_s=0.5)
+        tr = Tracer(sample_rate=rate)
+        router = FleetRouter(
+            [SimDisaggBackend(LM, InstanceConfig(PAR, 1),
+                              InstanceConfig(PAR, 1), prefix_cache=True,
+                              tracer=tr) for _ in range(2)],
+            policy="prefix_affinity", tracer=tr,
+            detector=OverloadDetector(max_inflight=4, max_queue=8,
+                                      shed_after_s=0.2))
+        for r in reqs:
+            router.submit(r)
+        res = router.drain()
+        return tr, router.decisions, res
+
+    tr_all, dec_all, res_all = fleet_run(1.0)
+    tr_thin, dec_thin, res_thin = fleet_run(0.1)
+    assert dec_all == dec_thin
+    assert set(res_all) == set(res_thin)
+    for rid in res_all:
+        assert res_all[rid].tokens == res_thin[rid].tokens
+        assert res_all[rid].finish == res_thin[rid].finish
+        assert res_all[rid].finish_reason == res_thin[rid].finish_reason
+    assert len(tr_thin.spans) < len(tr_all.spans)   # it did thin the trace
+    assert tr_thin.terminals == tr_all.terminals    # but lost no terminals
