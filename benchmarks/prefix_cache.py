@@ -54,11 +54,16 @@ def run(arch: str = "yi-6b-smoke", shares=(0.0, 0.5, 0.9),
         reqs = _live_trace(cfg, share, n)
         runs = {}
         for on in (False, True):
-            dc = DisaggCluster(cfg, params, n_prefill=1, n_decode=1,
-                               max_batch=8, max_len=128, lm_tokens=96,
-                               prefix_cache=on)
-            res, us = timed(dc.run, _clone(reqs))
-            runs[on] = (dc, res, us)
+            # best-of-2: single samples of the CPU live path jitter well
+            # past the trajectory gate's tolerance (GC, jit warmup)
+            best = None
+            for _ in range(2):
+                dc = DisaggCluster(cfg, params, n_prefill=1, n_decode=1,
+                                   max_batch=8, max_len=128, lm_tokens=96,
+                                   prefix_cache=on)
+                res, us = timed(dc.run, _clone(reqs))
+                best = us if best is None else min(best, us)
+            runs[on] = (dc, res, best)
         dc_on, res_on, us_on = runs[True]
         dc_off, res_off, _ = runs[False]
         # reuse must not change the tokens served
@@ -86,12 +91,17 @@ def run(arch: str = "yi-6b-smoke", shares=(0.0, 0.5, 0.9),
         out = {}
         us = 0.0
         for on in (False, True):
-            (rr, extras), dt = timed(
-                simulate_disaggregated,
-                _clone(reqs), lm, InstanceConfig(Parallelism(1, 1), 2),
-                InstanceConfig(Parallelism(1, 1), 1), prefix_cache=on)
+            # best-of-3: the pure-Python sim is fast enough that a single
+            # sample is mostly scheduler/GC noise
+            best = None
+            for _ in range(3):
+                (rr, extras), dt = timed(
+                    simulate_disaggregated,
+                    _clone(reqs), lm, InstanceConfig(Parallelism(1, 1), 2),
+                    InstanceConfig(Parallelism(1, 1), 1), prefix_cache=on)
+                best = dt if best is None else min(best, dt)
             out[on] = (rr, extras)
-            us += dt
+            us += best
         _, ex_on = out[True]
         _, ex_off = out[False]
         pfx = ex_on["prefix"]

@@ -225,6 +225,39 @@ class LatencyModel:
         lm = max(int(weight_time / per_tok_time), 1)
         return min(lm, 8192)
 
+    def auto_chunk_tokens(self, par: Parallelism, *,
+                          page_tokens: int = 16,
+                          overhead_frac: float = 0.1,
+                          ref_tokens: int = 2048) -> int:
+        """Model-derived chunked-prefill chunk size: the smallest page
+        multiple whose chunking cost on a `ref_tokens` prompt stays within
+        ``overhead_frac`` of the unchunked prefill time.
+
+        Chunking re-pays the per-batch overhead (`c_over *
+        chip.step_overhead`) once per chunk and loses weight-read
+        amortization on short chunks, so tiny chunks are expensive; huge
+        chunks stall decode longer (the interference `prefill_chunk_time`
+        charges when a chunk runs on a decode/mixed instance). This walks
+        chunk sizes up one page at a time and returns the first that fits
+        the overhead budget — callers keep `chunk_tokens=<int>` as a
+        manual override.
+        """
+        page_tokens = max(int(page_tokens), 1)
+        ref = max(int(ref_tokens), page_tokens)
+        base = self.prefill_time([ref], par)
+        budget = (1.0 + overhead_frac) * base
+        c = page_tokens
+        while c < ref:
+            total, ctx = 0.0, 0
+            while ctx < ref:
+                new = min(c, ref - ctx)
+                total += self.prefill_chunk_time([(new, ctx)], par)
+                ctx += new
+            if total <= budget:
+                break
+            c += page_tokens
+        return min(c, ref)
+
     def kv_transfer_time(self, prompt_len: int, bandwidth: float) -> float:
         c = self.cfg
         if c.family == "ssm":

@@ -17,7 +17,8 @@ from typing import Dict, List, Optional, Tuple
 from . import hw
 from .goodput import GoodputResult, SLOReport, attainment_at_rate, max_goodput
 from .latency_model import LatencyModel, Parallelism
-from .simulator import InstanceConfig, simulate_colocated, simulate_disaggregated
+from .simulator import (InstanceConfig, simulate_colocated,
+                        simulate_disaggregated, simulate_roles)
 from .workload import WorkloadSpec
 
 
@@ -197,6 +198,80 @@ def algo2_low_affinity(lm: LatencyModel, spec: WorkloadSpec, *,
                      n_requests, seed) if final_slo else None
     return Placement(pre, dec, n, n, transfer_bw, "low-affinity",
                      search_s, slo=slo)
+
+
+@dataclasses.dataclass
+class ModePlacement:
+    """Result of `mode_search`: the per-instance role vector for a fixed
+    fleet of `len(roles)` identical instances, plus the attainment the
+    closing simulation measured for it at the target rate."""
+    roles: List[str]
+    par: Parallelism
+    mode: str                   # "disagg" | "colocated" | "mixed-k"
+    attain: float
+    slo: Optional[SLOReport] = None
+    search_s: float = 0.0
+
+    @property
+    def chips(self) -> int:
+        return len(self.roles) * self.par.num_chips
+
+    def summary(self) -> Dict:
+        return {"mode": self.mode, "roles": list(self.roles),
+                "tp": self.par.tp, "pp": self.par.pp,
+                "chips": self.chips, "attain": round(self.attain, 4),
+                "search_s": round(self.search_s, 2)}
+
+
+def mode_candidates(n_instances: int) -> List[Tuple[str, List[str]]]:
+    """Candidate ``(mode, roles)`` vectors for a fleet of N identical
+    instances: every pure disaggregated split, every mixed-k hybrid
+    (k colocated instances riding with a disaggregated remainder), and
+    fully colocated. Disaggregated splits come first so attainment ties
+    resolve toward the paper's baseline architecture."""
+    assert n_instances >= 1
+    out: List[Tuple[str, List[str]]] = []
+    for n_p in range(1, n_instances):
+        out.append(("disagg", ["prefill"] * n_p
+                    + ["decode"] * (n_instances - n_p)))
+    for k in range(1, n_instances - 1):
+        for n_p in range(1, n_instances - k):
+            n_d = n_instances - k - n_p
+            out.append((f"mixed-{k}", ["prefill"] * n_p
+                        + ["decode"] * n_d + ["mixed"] * k))
+    out.append(("colocated", ["mixed"] * n_instances))
+    return out
+
+
+def mode_search(lm: LatencyModel, spec: WorkloadSpec, *, rate: float,
+                par: Parallelism, n_instances: int,
+                chip: hw.Chip = hw.DEFAULT,
+                transfer_bw: Optional[float] = None,
+                chunk_tokens=None, absorb_tokens: Optional[int] = None,
+                n_requests: int = 200, seed: int = 0) -> ModePlacement:
+    """Mode-per-instance placement search: with roles as runtime state,
+    the deployment mode itself becomes a placement axis. For a fixed
+    fleet of `n_instances` identical instances, simulate every candidate
+    role vector (`mode_candidates`) at the target rate and keep the one
+    with the highest SLO attainment. The winning vector feeds
+    `apply_roles` on a live fleet — re-roling existing replicas instead
+    of rebuilding them (`serving.router.fleet_search`)."""
+    t0 = time.time()
+    bw = chip.ici_bw if transfer_bw is None else transfer_bw
+    best: Optional[ModePlacement] = None
+    for mode, roles in mode_candidates(n_instances):
+        def run(reqs, roles=roles):
+            return simulate_roles(reqs, lm, par, roles, transfer_bw=bw,
+                                  chunk_tokens=chunk_tokens,
+                                  absorb_tokens=absorb_tokens)
+        res = attainment_at_rate(run, spec, rate, n_requests=n_requests,
+                                 seed=seed)
+        if best is None or res.slo.attain > best.attain:
+            best = ModePlacement(list(roles), par, mode, res.slo.attain,
+                                 slo=res.slo)
+    assert best is not None
+    best.search_s = time.time() - t0
+    return best
 
 
 def ratio_counts(prefill_gp: float, decode_gp: float,

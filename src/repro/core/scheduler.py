@@ -183,6 +183,17 @@ class DisaggDispatcher:
                      hits[idx] if hits is not None else 0, now)
         return idx
 
+    def pick_absorb(self, rid: int, loads: Sequence[float],
+                    alive: Optional[Sequence[int]] = None,
+                    now: Optional[float] = None) -> int:
+        """Prefill-saturation spill: route a *whole prompt* to a
+        decode/mixed instance that will chunk-prefill it locally
+        (intra-instance aggregation). Recorded apart from normal decode
+        dispatch so parity tests and benchmarks can count absorbed work."""
+        idx = least_loaded(loads, alive)
+        self._record("absorb", rid, idx, 0, now)
+        return idx
+
     def by_rid(self) -> Dict[int, Dict[str, int]]:
         out: Dict[int, Dict[str, int]] = {}
         for kind, rid, idx, _hit in self.decisions:

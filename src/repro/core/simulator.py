@@ -29,7 +29,7 @@ Token ids are not modeled (the latency model has no logits), so simulated
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .kv_transfer import TransferManager, kv_bytes, pipelined_finish
 from .latency_model import LatencyModel, Parallelism
@@ -185,11 +185,19 @@ class _DecodeInstance:
         self.kv_full: Dict[int, float] = {}
         self.busy = False
         self.tree = tree                 # decode-side shared-prefix model
+        # chunked-prefill absorption (role-unified backend): whole prompts
+        # spilled here when the prefill tier saturates. None on legacy
+        # static-disagg instances — absorb paths never run there.
+        self.absorb: Optional[FCFSQueue] = None
+        self.absorbing: set = set()      # rids mid-absorption (resident)
 
     @property
     def load(self) -> int:
-        return (len(self.running) + len(self.pending) + len(self.arrived)
-                + len(self.granted) + self.in_transfer)
+        n = (len(self.running) + len(self.pending) + len(self.arrived)
+             + len(self.granted) + self.in_transfer)
+        if self.absorb is not None and (self.absorb.items or self.absorbing):
+            n += len(self.absorbing | {r.rid for r in self.absorb.items})
+        return n
 
     def charge_pages(self, r: Request) -> int:
         """Fresh pages a request needs: full residency minus the pages its
@@ -208,7 +216,8 @@ class _DecodeInstance:
         return max(full - r.decode_hit // page_tokens, 0)
 
     def can_admit(self, r: Request) -> bool:
-        resident = len(self.running) + len(self.arrived) + self.in_transfer
+        resident = (len(self.running) + len(self.arrived) + self.in_transfer
+                    + len(self.absorbing))
         return (resident < self.max_batch
                 and self.pool.can_alloc(self.charge_pages(r)))
 
@@ -251,9 +260,33 @@ class _SimBackend(BackendBase):
                 state.sampling.out_len(state.request.out_len)
 
 
-class SimDisaggBackend(_SimBackend):
-    """Discrete-event disaggregated serving behind the ServingBackend
-    protocol (the simulator twin of `serving.cluster.DisaggCluster`).
+class SimServingBackend(_SimBackend):
+    """Role-unified discrete-event serving simulator (the twin of
+    `serving.cluster.ServingCluster`).
+
+    Every instance carries a *role* — ``"prefill"``, ``"decode"`` or
+    ``"mixed"`` — instead of the role being baked into the class. A
+    disaggregated deployment is a prefill+decode role vector; a colocated
+    (vLLM-like) deployment is the degenerate "all instances mixed" case.
+    `SimDisaggBackend` / `SimColocatedBackend` remain as thin shims that
+    translate their legacy constructor signatures into role vectors and
+    produce byte-identical schedules.
+
+    On top of the static roles:
+
+    * `set_role(g, role)` flips an instance at runtime. The instance
+      leaves the routing views immediately; queued-but-unstarted work is
+      re-routed through the shared dispatcher; resident work (running
+      decodes, granted/streaming KV, partial chunks) drains in place, and
+      the flip completes when the instance is idle — so a decode→prefill
+      flip never strands or leaks KV pages (`PagePool.used == 0` is
+      asserted at completion). A prefill→decode flip drains in one batch
+      time; there is no KV to move.
+    * chunked-prefill *absorption*: when every routable prefill queue is
+      deeper than ``absorb_tokens``, new prompts spill to a decode/mixed
+      instance which prefills them locally in bounded chunks
+      (`prefill_chunk_time` per chunk, serialized with its decode
+      iterations) — intra-instance aggregation under prefill bursts.
 
     phase="prefill": requests finish at first token (simu_prefill, Alg. 1);
     phase="decode": prefill is instantaneous (simu_decode, Alg. 1).
@@ -268,8 +301,8 @@ class SimDisaggBackend(_SimBackend):
     decisions on one trace.
     """
 
-    def __init__(self, lm: LatencyModel, prefill: InstanceConfig,
-                 decode: InstanceConfig, *,
+    def __init__(self, lm: LatencyModel,
+                 instances: Sequence[Tuple[str, Parallelism]], *,
                  transfer_bw: float = 50e9,
                  lm_tokens: Optional[int] = None,
                  max_decode_batch: Optional[int] = None,
@@ -279,7 +312,10 @@ class SimDisaggBackend(_SimBackend):
                  dispatcher: Optional[DisaggDispatcher] = None,
                  phase: str = "both",
                  prefix_cache: Optional[bool] = None,
-                 chunk_tokens: Optional[int] = None,
+                 chunk_tokens=None,
+                 max_prefill_tokens: int = 2048,
+                 max_mixed_batch: Optional[int] = None,
+                 absorb_tokens: Optional[int] = None,
                  horizon: float = 1e9,
                  tracker=None,
                  record_events: bool = True,
@@ -290,26 +326,34 @@ class SimDisaggBackend(_SimBackend):
         self.phase = phase
         self.transfer_bw = transfer_bw
         self.page_tokens = page_tokens
-        lm_tok = lm_tokens or lm.saturation_tokens(prefill.par)
-        cap = (lm.chip.hbm_bytes * decode.par.num_chips * (1 - kv_reserve)
-               - lm.param_bytes())
-        cap = max(cap, lm.chip.hbm_bytes * 0.05 * decode.par.num_chips)
+        self.max_prefill_tokens = max_prefill_tokens
+        roles = [r for r, _ in instances]
+        self._pars = [par for _, par in instances]
+        ref_par = next((par for r, par in instances if r == "prefill"),
+                       self._pars[0] if self._pars else Parallelism())
+        lm_tok = lm_tokens or lm.saturation_tokens(ref_par)
+        self._lm_tok = lm_tok
+        self._kv_reserve = kv_reserve
         max_b = max_decode_batch or 4096
+        self._max_b = max_b
+        self._max_mb = max_mixed_batch or 4096
         # page-granular capacity: one page = page_tokens worth of KV bytes
         # (SSM archs: one page per constant-size state)
         per_tok = lm.cfg.kv_bytes_per_token(lm.dtype_bytes)
         page_bytes = per_tok * page_tokens if per_tok else lm.kv_read_bytes(0)
         page_bytes = max(page_bytes, 1.0)
-        n_pages = num_decode_pages if num_decode_pages is not None \
-            else max(int(cap // page_bytes), 1)
+        self._page_bytes = page_bytes
+        self._num_decode_pages = num_decode_pages
         self._per_tok = per_tok
-        self._auto_prefix = prefix_cache is None
+        has_pd = any(r in ("prefill", "decode") for r in roles)
+        self._auto_prefix = prefix_cache is None and has_pd
         self.prefix_on = bool(prefix_cache) and per_tok > 0
-        self.P = [_PrefillInstance(i, lm, prefill.par, lm_tok)
-                  for i in range(prefill.count)]
-        self.D = [_DecodeInstance(i, lm, decode.par,
-                                  PagePool(n_pages, page_bytes), max_b)
-                  for i in range(decode.count)]
+        # birth-order construction; role-local iids give the legacy
+        # labels/metric keys ("prefill0", "decode1", "engine0", ...)
+        self.inst: List[Any] = []
+        self._iid_next = {"prefill": 0, "decode": 0, "mixed": 0}
+        for role, par in instances:
+            self.inst.append(self._make_instance(role, par))
         if self.prefix_on:
             self._grow_trees()
         self.disp = dispatcher or DisaggDispatcher()
@@ -319,37 +363,137 @@ class SimDisaggBackend(_SimBackend):
         # structure as the live cluster (per-chunk `prefill_chunk_time`,
         # per-chunk `park_partial`, streamed admission). Needs per-token
         # KV (SSM state is constant-size; nothing to chunk-ship).
+        # chunk_tokens="auto" sizes the chunk from the latency model: the
+        # smallest page-multiple whose chunking overhead stays under the
+        # model's budget fraction (the knob remains as an override).
+        if chunk_tokens == "auto":
+            chunk_tokens = lm.auto_chunk_tokens(ref_par,
+                                                page_tokens=page_tokens)
         self.chunk_tokens = (chunk_tokens if chunk_tokens and per_tok > 0
                              and phase != "decode" else None)
         self._chunk_ctx: Dict[int, int] = {}    # rid -> tokens prefilled
-        self._sim_stream: Dict[int, int] = {}   # rid -> decode target
+        self._sim_stream: Dict[int, Any] = {}   # rid -> decode instance
         if self.chunk_tokens:
-            for p in self.P:
-                # queue load = tokens still to prefill (matches the live
-                # cluster's re-queue-with-remaining-suffix accounting)
-                p.queue.token_of = lambda r: max(
-                    r.in_len - self._chunk_ctx.get(r.rid, 0), 0)
+            for p in self.inst:
+                if isinstance(p, _PrefillInstance):
+                    # queue load = tokens still to prefill (matches the
+                    # live re-queue-with-remaining-suffix accounting)
+                    p.queue.token_of = self._remaining_tokens
+        # absorption: spill whole prompts to decode/mixed instances when
+        # every routable prefill queue is deeper than absorb_tokens
+        self.absorb_tokens = absorb_tokens
+        self._absorb_chunk = self.chunk_tokens
+        if absorb_tokens is not None and not self._absorb_chunk \
+                and per_tok > 0 and phase != "decode":
+            self._absorb_chunk = lm.auto_chunk_tokens(
+                ref_par, page_tokens=page_tokens)
         self.busy_prefill = 0.0
         self.busy_decode = 0.0
+        self.busy_absorb = 0.0
+        self.absorbed = 0
+        self._role_events: List[Tuple[float, str, str]] = []
+        self._twins: Dict[Tuple[int, str], Any] = {}
+        self._backlog: List[RequestState] = []  # arrivals held mid-re-role
+        d0 = next((x for x in self.inst
+                   if isinstance(x, _DecodeInstance)), None)
         self._breakdown = {"lm_tokens": lm_tok, "max_decode_batch": max_b,
-                           "decode_pages": n_pages}
+                           "decode_pages": d0.pool.num_pages if d0 else 0}
         if self.tracer.enabled:
             self.tx.tracer = self.tracer
             self.disp.tracer = self.tracer
         if metrics is not None:
             metrics.register(self._collect_metrics)
 
+    # -- instance construction / role views ------------------------------
+    def _remaining_tokens(self, r: Request) -> int:
+        return max(r.in_len - self._chunk_ctx.get(r.rid, 0), 0)
+
+    def _decode_cap(self, par: Parallelism) -> float:
+        lm = self.lm
+        cap = (lm.chip.hbm_bytes * par.num_chips * (1 - self._kv_reserve)
+               - lm.param_bytes())
+        return max(cap, lm.chip.hbm_bytes * 0.05 * par.num_chips)
+
+    def _make_instance(self, role: str, par: Parallelism,
+                       label: Optional[str] = None):
+        iid = self._iid_next[role]
+        self._iid_next[role] += 1
+        if role == "prefill":
+            x = _PrefillInstance(iid, self.lm, par, self._lm_tok)
+            x.label = label or f"prefill{iid}"
+            if getattr(self, "chunk_tokens", None):
+                x.queue.token_of = self._remaining_tokens
+        elif role == "decode":
+            cap = self._decode_cap(par)
+            n_pages = self._num_decode_pages \
+                if self._num_decode_pages is not None \
+                else max(int(cap // self._page_bytes), 1)
+            x = _DecodeInstance(iid, self.lm, par,
+                                PagePool(n_pages, self._page_bytes),
+                                self._max_b)
+            x.label = label or f"decode{iid}"
+            x.absorb = FCFSQueue(token_of=self._remaining_tokens)
+            x.absorbing = set()
+        elif role == "mixed":
+            x = _ColoEngine(iid, self._max_mb, self._decode_cap(par), par)
+            x.label = label or f"engine{iid}"
+        else:
+            raise ValueError(f"unknown role {role!r}")
+        x.par = par
+        x.draining = False
+        x.target = None
+        if self.prefix_on and not isinstance(x, _ColoEngine):
+            x.tree = RadixPrefixCache(self.page_tokens)
+        return x
+
+    @staticmethod
+    def _role_of(inst) -> str:
+        if isinstance(inst, _PrefillInstance):
+            return "prefill"
+        if isinstance(inst, _DecodeInstance):
+            return "decode"
+        return "mixed"
+
+    @property
+    def P(self) -> List["_PrefillInstance"]:
+        return [x for x in self.inst if isinstance(x, _PrefillInstance)]
+
+    @property
+    def D(self) -> List["_DecodeInstance"]:
+        return [x for x in self.inst if isinstance(x, _DecodeInstance)]
+
+    @property
+    def engines(self) -> List["_ColoEngine"]:
+        return [x for x in self.inst if isinstance(x, _ColoEngine)]
+
+    @property
+    def roles(self) -> List[str]:
+        return [self._role_of(x) for x in self.inst]
+
+    def _p_route(self) -> List["_PrefillInstance"]:
+        return [x for x in self.P if not x.draining]
+
+    def _d_route(self) -> List["_DecodeInstance"]:
+        return [x for x in self.D if not x.draining]
+
+    def _e_route(self) -> List["_ColoEngine"]:
+        return [x for x in self.engines if not x.draining]
+
     def _collect_metrics(self) -> Dict[str, float]:
         """Pull-collector for a `MetricsRegistry` (the simulator twin of
-        `DisaggCluster._collect_metrics`)."""
-        out: Dict[str, float] = {"busy_prefill_s": self.busy_prefill,
-                                 "busy_decode_s": self.busy_decode}
-        for p in self.P:
+        `ServingCluster._collect_metrics`). Key names stay byte-identical
+        to the legacy per-class collectors for static role vectors."""
+        out: Dict[str, float] = {}
+        P, D, E = self.P, self.D, self.engines
+        if P or D:
+            out["busy_prefill_s"] = self.busy_prefill
+            out["busy_decode_s"] = self.busy_decode
+        for p in P:
             out[f"queue{p.iid}.depth"] = len(p.queue)
             out[f"queue{p.iid}.tokens"] = p.queued_tokens
             out[f"prefill{p.iid}.inflight"] = p.inflight
-        for d in self.D:
-            pre = f"decode{d.iid}"
+        for d in D:
+            pre = d.label
             out[f"{pre}.kv.num_pages"] = d.pool.num_pages
             out[f"{pre}.kv.used_pages"] = d.pool.used
             out[f"{pre}.kv.free_pages"] = d.pool.free_pages
@@ -359,15 +503,28 @@ class SimDisaggBackend(_SimBackend):
             out[f"{pre}.arrived"] = len(d.arrived)
             out[f"{pre}.granted"] = len(d.granted)
             out[f"{pre}.in_transfer"] = d.in_transfer
-        for k, v in self.tx.stats().items():
-            out[f"tx.{k}"] = v
+        for e in E:
+            out[f"{e.label}.queue.depth"] = float(len(e.waiting))
+            out[f"{e.label}.running"] = float(len(e.running))
+            out[f"{e.label}.kv_used_bytes"] = float(e.kv_used)
+        if P or D:
+            for k, v in self.tx.stats().items():
+                out[f"tx.{k}"] = v
         if self.prefix_on:
-            for side, insts in (("prefill", self.P), ("decode", self.D)):
-                for inst in insts:
-                    if inst.tree is None:
-                        continue
-                    for k, v in inst.tree.metrics().items():
-                        out[f"{side}{inst.iid}.prefix.{k}"] = v
+            for inst in (*P, *D):
+                if inst.tree is None:
+                    continue
+                side = "prefill" if isinstance(inst, _PrefillInstance) \
+                    else "decode"
+                for k, v in inst.tree.metrics().items():
+                    out[f"{side}{inst.iid}.prefix.{k}"] = v
+        if self._role_events:        # dynamic fleets: expose role ids
+            ids = {"prefill": 0.0, "decode": 1.0, "mixed": 2.0}
+            for x in self.inst:
+                out[f"{x.label}.role_id"] = ids[self._role_of(x)]
+                out[f"{x.label}.draining"] = float(x.draining)
+            out["role_changes"] = float(len(self._role_events))
+            out["absorbed"] = float(self.absorbed)
         return out
 
     def _grow_trees(self):
@@ -400,6 +557,14 @@ class SimDisaggBackend(_SimBackend):
             self._on_transfer_first(payload, t)
         elif kind == "decode_iter":
             self._on_decode_iter(payload, t)
+        elif kind == "absorb_done":
+            self._on_absorb_done(payload, t)
+        elif kind == "poke":
+            self._step_engine(payload, t)
+        elif kind == "m_prefill_done":
+            self._on_mixed_prefill_done(payload, t)
+        elif kind == "m_decode_iter":
+            self._on_mixed_decode_iter(payload, t)
 
     # -- event handlers --------------------------------------------------
     def _on_arrive(self, state: RequestState, t: float):
@@ -412,20 +577,91 @@ class SimDisaggBackend(_SimBackend):
             self._emit_token(state, -1, t)
             self._assign_decode(state, t, src=0)
             return
+        P = self._p_route()
+        if not P:
+            # no routable prefill tier: colocated (all-mixed) deployment,
+            # or a transient all-decode fleet -> absorb everywhere
+            if self._e_route() and not (self.absorb_tokens is not None
+                                        and self._d_route()):
+                self._mixed_arrive(state, t)
+            elif not self._route_absorb(state, t):
+                if any(x.target is not None for x in self.inst):
+                    # mid-re-role transient: every sink is draining. Hold
+                    # the arrival; `_complete_flip` re-dispatches it.
+                    self._backlog.append(state)
+                    state.where = ("backlog", None)
+                    if self.tracer.enabled:
+                        self.tracer.phase(r.rid, "queued", t, "backlog")
+                    return
+                raise RuntimeError(
+                    "no routable prefill/mixed instance and absorption "
+                    "is unavailable")
+            return
+        if (self.absorb_tokens is not None
+                and min(p.queued_tokens for p in P) > self.absorb_tokens
+                and self._route_absorb(state, t)):
+            return
         hits = None
         if self.prefix_on and r.tokens is not None:
-            hits = [p.tree.peek(r.tokens) for p in self.P]
-        pi = self.disp.pick_prefill(r.rid, [p.queue for p in self.P],
+            hits = [p.tree.peek(r.tokens) for p in P]
+        pi = self.disp.pick_prefill(r.rid, [p.queue for p in P],
                                     hits=hits, now=t)
-        self.P[pi].queue.push(r)
-        state.where = ("prefill", pi)
+        p = P[pi]
+        p.queue.push(r)
+        state.where = ("prefill", p)
         if self.tracer.enabled:
-            self.tracer.phase(r.rid, "queued", t, f"prefill{pi}")
-        self._ev.push(t, "prefill_poke", self.P[pi])
+            self.tracer.phase(r.rid, "queued", t, p.label)
+        self._ev.push(t, "prefill_poke", p)
+
+    def _absorb_targets(self) -> List[Any]:
+        """Instances that can take a whole prompt when the prefill tier is
+        saturated: decode instances with chunk machinery, mixed engines."""
+        out: List[Any] = []
+        for x in self.inst:
+            if x.draining:
+                continue
+            if isinstance(x, _DecodeInstance) and self._absorb_chunk:
+                out.append(x)
+            elif isinstance(x, _ColoEngine):
+                out.append(x)
+        return out
+
+    def _route_absorb(self, state: RequestState, t: float) -> bool:
+        targets = self._absorb_targets()
+        if not targets:
+            return False
+        r = state.request
+        loads = [float(x.load) for x in targets]
+        ai = self.disp.pick_absorb(r.rid, loads, now=t)
+        x = targets[ai]
+        self.absorbed += 1
+        if isinstance(x, _ColoEngine):
+            x.waiting.push(r)
+            state.where = ("queued", x)
+            if self.tracer.enabled:
+                self.tracer.phase(r.rid, "queued", t, x.label)
+            self._step_engine(x, t)
+        else:
+            x.absorb.push(r)
+            state.where = ("absorb", x)
+            if self.tracer.enabled:
+                self.tracer.phase(r.rid, "queued", t, x.label)
+            self._ev.push(t, "decode_poke", x)
+        return True
+
+    def _mixed_arrive(self, state: RequestState, t: float):
+        E = self._e_route()
+        e = E[least_loaded([x.load for x in E])]
+        e.waiting.push(state.request)
+        state.where = ("queued", e)
+        if self.tracer.enabled:
+            self.tracer.phase(state.rid, "queued", t, e.label)
+        self._step_engine(e, t)
 
     def _try_start_prefill(self, p: _PrefillInstance, now: float):
         if self.chunk_tokens:
             self._chunk_step(p, now)
+            self._check_flip(p, now)
             return
         while p.can_admit():
             start = max(now, p.next_admit)
@@ -457,13 +693,14 @@ class SimDisaggBackend(_SimBackend):
                 st.where = ("prefill_run", p)
                 st.to_status(RequestStatus.PREFILLING)
                 if self.tracer.enabled:
-                    lane = f"prefill{p.iid}"
+                    lane = p.label
                     self.tracer.phase(r.rid, "prefilling", now, lane)
                     self.tracer.complete(
                         "compute", "prefill_batch", now, now + T, lane,
                         rid=r.rid, tokens=r.in_len - r.prefix_hit,
                         hit=r.prefix_hit)
             self._ev.push(now + T, "prefill_done", (p, batch, T))
+        self._check_flip(p, now)
 
     def _on_prefill_done(self, payload, t: float):
         p, batch, T = payload
@@ -517,7 +754,7 @@ class SimDisaggBackend(_SimBackend):
         T = self.lm.prefill_chunk_time([(c, ctx)], p.par)
         p.inflight += 1
         if self.tracer.enabled:
-            lane = f"prefill{p.iid}"
+            lane = p.label
             self.tracer.phase(r.rid, "prefilling", now, lane)
             self.tracer.complete("compute", "chunk", now, now + T, lane,
                                  rid=r.rid, tokens=c, ctx=ctx)
@@ -545,7 +782,7 @@ class SimDisaggBackend(_SimBackend):
         self._chunk_ctx[r.rid] = done_tok
         if done_tok < r.in_len:
             p.queue.push(r)
-            state.where = ("prefill", p.iid)
+            state.where = ("prefill", p)
             if r.rid not in self._sim_stream:
                 # first chunk landed: pick the decode target now so the
                 # wire can overlap the remaining chunks' compute
@@ -570,42 +807,63 @@ class SimDisaggBackend(_SimBackend):
                 self._assign_decode(state, t, src=p.iid)
         self._try_start_prefill(p, t)
 
+    def _engine_adopt(self, state: RequestState, now: float):
+        """No decode-role instance remains (an aggregation re-role overlapped
+        in-flight prefill work): hand the finished prefill straight to a
+        mixed engine's running batch. The KV moves with it; wire time is
+        charged as zero — this only occurs in the drain transient."""
+        E = self._e_route() or self.engines
+        r = state.request
+        e = E[least_loaded([x.load for x in E])]
+        r.decode_admit = now
+        r.transfer_done = now
+        e.kv_used += _req_kv_bytes(self.lm, r)
+        state.where = ("running", e)
+        state.to_status(RequestStatus.DECODING)
+        if self.tracer.enabled:
+            self.tracer.phase(r.rid, "decoding", now, e.label)
+        e.running.append(r)
+        self._ev.push(now, "poke", e)
+
     def _predispatch_decode(self, state: RequestState, now: float):
         r = state.request
+        D = self._d_route() or self.D
+        if not D:       # aggregation drain: adopt at the final chunk
+            return
         d_hits = None
         if self.prefix_on and r.tokens is not None:
-            d_hits = [d.tree.peek(r.tokens) for d in self.D]
-        di = self.disp.pick_decode(r.rid, [d.load for d in self.D],
+            d_hits = [d.tree.peek(r.tokens) for d in D]
+        di = self.disp.pick_decode(r.rid, [d.load for d in D],
                                    hits=d_hits, now=now)
+        d = D[di]
         r.decode_hit = d_hits[di] if d_hits else 0
-        self._sim_stream[r.rid] = di
-        self.D[di].pending.append(r)
-        self._ev.push(now, "decode_poke", self.D[di])
+        self._sim_stream[r.rid] = d
+        d.pending.append(r)
+        self._ev.push(now, "decode_poke", d)
 
     def _finalize_stream(self, state: RequestState, now: float, src: int):
         """Final chunk landed: close the stream with the decode-side ship
         size; admission (or the earlier grant) pulls the per-segment
         schedule."""
         r = state.request
-        di = self._sim_stream.pop(r.rid)
+        d = self._sim_stream.pop(r.rid)
         ship = r.in_len - r.decode_hit
         nbytes = kv_bytes(self.lm.cfg, ship, self.lm.dtype_bytes) \
             if ship else 0.0
         self.tx.park(r.rid, r, nbytes, now, src=src)
-        state.where = ("pending", di)
+        state.where = ("pending", d)
         state.to_status(RequestStatus.MIGRATING)
         if self.tracer.enabled:
-            self.tracer.phase(r.rid, "migrating", now, f"decode{di}")
-        self._ev.push(now, "decode_poke", self.D[di])
+            self.tracer.phase(r.rid, "migrating", now, d.label)
+        self._ev.push(now, "decode_poke", d)
 
     def _drop_sim_stream(self, r: Request, t: float):
         """Remove every trace of a streamed chunked migration (cancel):
         parked segments, the route, and the granted pages."""
         self.tx.drop_partial(r.rid)
-        di = self._sim_stream.pop(r.rid, None)
-        if di is None:
+        d = self._sim_stream.pop(r.rid, None)
+        if d is None:
             return
-        d = self.D[di]
         if r in d.pending:
             d.pending.remove(r)
         if r.rid in d.granted:
@@ -614,13 +872,21 @@ class SimDisaggBackend(_SimBackend):
         self._ev.push(t, "decode_poke", d)
 
     def _assign_decode(self, state: RequestState, now: float, src: int):
-        """Least-loaded decode dispatch + park on the prefill side."""
+        """Least-loaded decode dispatch + park on the prefill side.
+        Draining decode instances still accept work finished on a prefill
+        instance (their flip waits for load to reach zero); with no
+        decode-typed instance left at all, a mixed engine adopts it."""
         r = state.request
+        D = self._d_route() or self.D
+        if not D:
+            self._engine_adopt(state, now)
+            return
         d_hits = None
         if self.prefix_on and r.tokens is not None and self.phase != "decode":
-            d_hits = [d.tree.peek(r.tokens) for d in self.D]
-        di = self.disp.pick_decode(r.rid, [d.load for d in self.D],
+            d_hits = [d.tree.peek(r.tokens) for d in D]
+        di = self.disp.pick_decode(r.rid, [d.load for d in D],
                                    hits=d_hits, now=now)
+        d = D[di]
         # wire bytes = prompt KV the decode side is missing (decode
         # positions are produced there; a shared prefix already resides
         # there); page reservation below covers the full residency. wire
@@ -636,12 +902,12 @@ class SimDisaggBackend(_SimBackend):
             wire_s = self.lm.kv_transfer_time(ship, self.transfer_bw) \
                 if ship else 0.0
         self.tx.park(r.rid, r, nbytes, now, src=src, wire_s=wire_s)
-        self.D[di].pending.append(r)
-        state.where = ("pending", di)
+        d.pending.append(r)
+        state.where = ("pending", d)
         state.to_status(RequestStatus.MIGRATING)
         if self.tracer.enabled:
-            self.tracer.phase(r.rid, "migrating", now, f"decode{di}")
-        self._ev.push(now, "decode_poke", self.D[di])
+            self.tracer.phase(r.rid, "migrating", now, d.label)
+        self._ev.push(now, "decode_poke", d)
 
     def _try_admit(self, d: _DecodeInstance, now: float):
         """Pull-based admission: reserve pages, then pull over the link."""
@@ -681,7 +947,7 @@ class SimDisaggBackend(_SimBackend):
                 st.to_status(RequestStatus.PENDING_ADMIT)
                 if self.tracer.enabled:
                     self.tracer.phase(r.rid, "pending_admit", now,
-                                      f"decode{d.iid}")
+                                      d.label)
 
     def _start_pull(self, d: _DecodeInstance, r: Request, now: float):
         """Start a request's wire transfer (pages already allocated)."""
@@ -695,7 +961,7 @@ class SimDisaggBackend(_SimBackend):
             _, t_first, t_full = self.tx.pull_streamed(r.rid, now, dst=d.iid)
         else:
             _, t_first, t_full = self.tx.pull_layered(r.rid, now, dst=d.iid)
-        state.where = ("transfer", d.iid)
+        state.where = ("transfer", d)
         # per-layer streaming: the request becomes joinable once the
         # first layer lands; the last layer's arrival only gates the
         # drain of the first iteration it joins (pipelined_finish); a
@@ -717,25 +983,33 @@ class SimDisaggBackend(_SimBackend):
         if self.tracer.enabled:
             # decode starts attending once the first layer lands — the
             # same instant the live cluster stamps in `_admit_one`
-            self.tracer.phase(r.rid, "decoding", t, f"decode{d.iid}")
+            self.tracer.phase(r.rid, "decoding", t, d.label)
         d.arrived.append(r)
         d.kv_full[r.rid] = r.transfer_done
-        state.where = ("arrived", d.iid)
+        state.where = ("arrived", d)
         self._try_start_decode(d, t)
 
     def _try_start_decode(self, d: _DecodeInstance, now: float):
         self._try_admit(d, now)
         if d.busy:
             return
+        # absorbed prompts chunk-prefill between decode iterations
+        # (prefill-priority, like a mixed engine; the chunk size bounds
+        # the decode stall — the interference the chunk charge models)
+        if d.absorb is not None and d.absorb.items and self._absorb_chunk \
+                and self.phase == "both":
+            if self._absorb_step(d, now):
+                return
         # transferred requests join the batch at an iteration boundary only
         # (mirrors the live cluster, which admits between decode steps)
         for r in d.arrived:
             st = self._states[r.rid]
-            st.where = ("running", d.iid)
+            st.where = ("running", d)
             st.to_status(RequestStatus.DECODING)
         d.running.extend(d.arrived)
         d.arrived.clear()
         if not d.running:
+            self._check_flip(d, now)
             return
         d.busy = True
         eff_b = max(len(d.running) / d.par.pp, 1.0)
@@ -752,7 +1026,7 @@ class SimDisaggBackend(_SimBackend):
                                                     self.tx.n_layers))
         if self.tracer.enabled:
             self.tracer.complete("step", "decode_step", now, end,
-                                 f"decode{d.iid}", batch=len(d.running),
+                                 d.label, batch=len(d.running),
                                  compute=tau)
         self._ev.push(end, "decode_iter", (d, tau))
 
@@ -791,6 +1065,337 @@ class SimDisaggBackend(_SimBackend):
         d.running = still
         self._try_start_decode(d, t)
 
+    # -- chunked-prefill absorption (intra-instance aggregation) ---------
+    def _absorb_step(self, d: _DecodeInstance, now: float) -> bool:
+        """One bounded prefill chunk on a decode instance, between its
+        decode iterations (prefill-priority, like a mixed engine). The
+        chunk size caps the decode stall; the per-chunk charge is the
+        same `prefill_chunk_time` the live engine is billed."""
+        def can_take(r):
+            if r.rid in d.absorbing:
+                return True
+            resident = (len(d.running) + len(d.arrived) + d.in_transfer
+                        + len(d.absorbing))
+            return (resident < d.max_batch
+                    and d.pool.can_alloc(d.charge_pages(r)))
+
+        batch = d.absorb.form_batch(
+            self._lm_tok, max_batch=1, can_take=can_take,
+            chunk_tokens=self._absorb_chunk,
+            resumable=lambda r: r.rid in d.absorbing)
+        if not batch:
+            return False
+        r = batch[0]
+        state = self._states[r.rid]
+        state.to_status(RequestStatus.PREFILLING)
+        state.where = ("absorb_run", d)
+        ps = self.page_tokens
+        S = r.in_len
+        if r.rid not in d.absorbing:    # first chunk: reserve residency
+            d.absorbing.add(r.rid)
+            d.pool.alloc(r.rid, d.charge_pages(r))
+            r.prefill_start = now
+            if d.tree is not None and r.tokens is not None:
+                h, _ = d.tree.match(r.tokens)
+                h = min(h, ((S - 1) // ps) * ps)
+                r.prefix_hit = h
+            self._chunk_ctx[r.rid] = r.prefix_hit
+        ctx = self._chunk_ctx[r.rid]
+        c = min(self._absorb_chunk, S - ctx)
+        if ctx + c < S:
+            c = min(max((c // ps) * ps, ps), S - ctx)
+        T = self.lm.prefill_chunk_time([(c, ctx)], d.par)
+        d.busy = True
+        if self.tracer.enabled:
+            self.tracer.phase(r.rid, "prefilling", now, d.label)
+            self.tracer.complete("compute", "absorb_chunk", now, now + T,
+                                 d.label, rid=r.rid, tokens=c, ctx=ctx)
+        self._ev.push(now + T, "absorb_done", (d, r, T, ctx, c))
+        return True
+
+    def _on_absorb_done(self, payload, t: float):
+        d, r, T, ctx, c = payload
+        d.busy = False
+        self.busy_absorb += T
+        state = self._states[r.rid]
+        if state.done:                  # cancelled mid-chunk
+            if r.rid in d.absorbing:
+                d.absorbing.discard(r.rid)
+                d.pool.free(r.rid)
+            self._chunk_ctx.pop(r.rid, None)
+            self._try_start_decode(d, t)
+            return
+        done_tok = ctx + c
+        self._chunk_ctx[r.rid] = done_tok
+        if done_tok < r.in_len:
+            d.absorb.push(r)
+            state.where = ("absorb", d)
+        else:
+            if d.tree is not None and r.tokens is not None:
+                d.tree.insert(r.tokens[:(r.in_len // self.page_tokens)
+                                       * self.page_tokens])
+            d.absorbing.discard(r.rid)
+            self._chunk_ctx.pop(r.rid, None)
+            r.first_token = t
+            self._emit_token(state, -1, t)
+            # KV is already local: no wire, joins at the next boundary
+            r.decode_admit = t
+            r.transfer_done = t
+            d.arrived.append(r)
+            state.where = ("arrived", d)
+            if self.tracer.enabled:
+                self.tracer.phase(r.rid, "decoding", t, d.label)
+        self._try_start_decode(d, t)
+
+    # -- mixed-role engine (colocated semantics) --------------------------
+    def _step_engine(self, e: "_ColoEngine", now: float):
+        if e.busy:
+            return
+        # prefill first (vLLM prioritizes waiting prefills), batch formed
+        # by the shared core; the stateful can_take reserves KV as it admits
+        taken = [0, 0.0]
+
+        def can_take(r):
+            if (len(e.running) + taken[0] < e.max_b
+                    and e.kv_used + taken[1]
+                    + _req_kv_bytes(self.lm, r) <= e.cap):
+                taken[0] += 1
+                taken[1] += _req_kv_bytes(self.lm, r)
+                return True
+            return False
+
+        batch = e.waiting.form_batch(self.max_prefill_tokens,
+                                     can_take=can_take)
+        if batch:
+            e.kv_used += taken[1]
+            e.busy = True
+            T = self.lm.prefill_time([r.in_len for r in batch], e.par)
+            for r in batch:
+                r.prefill_start = now
+                st = self._states[r.rid]
+                st.where = ("prefill_run", e)
+                st.to_status(RequestStatus.PREFILLING)
+                if self.tracer.enabled:
+                    lane = e.label
+                    self.tracer.phase(r.rid, "prefilling", now, lane)
+                    self.tracer.complete(
+                        "compute", "prefill_batch", now, now + T, lane,
+                        rid=r.rid, tokens=r.in_len, hit=0)
+            self._ev.push(now + T, "m_prefill_done", (e, batch))
+            return
+        if e.running:
+            e.busy = True
+            eff_b = max(len(e.running) / e.par.pp, 1.0)
+            ctx = sum(r.in_len + r.tokens_done for r in e.running)
+            tau = self.lm.decode_time(eff_b, ctx / e.par.pp,
+                                      Parallelism(e.par.tp, 1))
+            if self.tracer.enabled:
+                self.tracer.complete("step", "decode_step", now, now + tau,
+                                     e.label,
+                                     batch=len(e.running), compute=tau)
+            self._ev.push(now + tau, "m_decode_iter", (e, tau))
+            return
+        self._check_flip(e, now)
+
+    def _on_mixed_prefill_done(self, payload, t: float):
+        e, batch = payload
+        e.busy = False
+        for r in batch:
+            state = self._states[r.rid]
+            if state.done:              # cancelled mid-prefill
+                e.kv_used -= _req_kv_bytes(self.lm, r)
+                continue
+            r.first_token = t
+            r.decode_admit = t
+            self._emit_token(state, -1, t)
+            state.where = ("running", e)
+            state.to_status(RequestStatus.DECODING)
+            if self.tracer.enabled:
+                self.tracer.phase(r.rid, "decoding", t, e.label)
+            e.running.append(r)
+        self._step_engine(e, t)
+
+    def _on_mixed_decode_iter(self, payload, t: float):
+        e, tau = payload
+        e.busy = False
+        rec = self._recording
+        ontoken = self._ontoken_rids
+        cap = self._out_cap
+        still = []
+        for r in e.running:
+            r.tokens_done += 1
+            out_eff = cap[r.rid] if r.rid in cap else r.out_len
+            if rec or r.rid in ontoken:
+                self._emit_token(self._states[r.rid], -1, t)
+            if r.tokens_done >= out_eff - 1 or out_eff <= 1:
+                self._finish_state(self._states[r.rid], t)
+                e.kv_used -= _req_kv_bytes(self.lm, r)
+            else:
+                still.append(r)
+        e.running = still
+        self._step_engine(e, t)
+
+    # -- runtime re-roling ------------------------------------------------
+    def set_role(self, g: int, role: str, now: Optional[float] = None):
+        """Flip instance ``g`` to ``role`` ("prefill"/"decode"/"mixed").
+
+        The instance leaves the routing views immediately. Queued-but-
+        unstarted work is re-routed through the shared dispatcher (so the
+        decision log stays comparable across worlds); resident work —
+        running decodes, granted/streaming KV, partial chunks — drains in
+        place, and the swap to the new-role twin happens when the
+        instance is idle. A decode→prefill flip therefore never moves or
+        leaks pages (`pool.used == 0` is asserted at completion); a
+        prefill→decode flip drains within one batch/chunk time."""
+        assert role in ("prefill", "decode", "mixed"), role
+        now = self._ev.now if now is None else now
+        inst = self.inst[g]
+        if self._role_of(inst) == role:
+            inst.target = None          # flip-back cancels a pending drain
+            inst.draining = False
+            return
+        if inst.target == role:
+            return
+        # validate the fleet *after* every pending drain completes:
+        # somebody must accept arrivals, and prefill output needs a
+        # decode target (draining instances count as their target role)
+        after = [x.target or self._role_of(x)
+                 for x in self.inst if x is not inst] + [role]
+        if not any(r2 in ("prefill", "mixed")
+                   or (r2 == "decode" and self._absorb_chunk)
+                   for r2 in after):
+            raise ValueError("re-roling would leave no instance able to "
+                             "accept arrivals")
+        if self.phase == "both" and "prefill" in after \
+                and "decode" not in after:
+            raise ValueError("re-roling would leave prefill instances "
+                             "with no decode target")
+        inst.draining = True
+        inst.target = role
+        if self.tracer.enabled:
+            self.tracer.event("role_drain", now, lane=inst.label,
+                              role=role)
+        self._reroute_unstarted(inst, now)
+        self._check_flip(inst, now)
+
+    def apply_roles(self, roles: Sequence[str],
+                    now: Optional[float] = None):
+        """Reconcile the fleet's per-instance roles with a plan vector
+        (`FleetRouter.elastic_callback` / placement `mode_search`).
+        Decode-creating flips run first so a later prefill-creating flip
+        never transits through a prefill-without-decode-target fleet."""
+        order = {"decode": 0, "mixed": 1, "prefill": 2}
+        for g in sorted(range(min(len(roles), len(self.inst))),
+                        key=lambda g: order.get(roles[g], 3)):
+            self.set_role(g, roles[g], now=now)
+
+    def pressure(self) -> Dict[str, float]:
+        """Load signals for role controllers and routers: prefill queue
+        depth and decode KV-page occupancy (the memory-bound overload
+        signal queue depth misses)."""
+        P, D, E = self._p_route(), self._d_route(), self._e_route()
+        util = max((d.pool.used / max(d.pool.num_pages, 1) for d in D),
+                   default=0.0)
+        return {
+            "prefill_queued_tokens": float(sum(p.queued_tokens
+                                               for p in P)),
+            "prefill_inflight": float(sum(p.inflight for p in P)),
+            "decode_kv_util": float(util),
+            "decode_load": float(sum(d.load for d in D)),
+            "mixed_load": float(sum(e.load for e in E)),
+            "n_prefill": float(len(P)), "n_decode": float(len(D)),
+            "n_mixed": float(len(E)),
+        }
+
+    def kv_utilization(self) -> float:
+        """Peak decode page-pool occupancy in [0, 1] (router-side
+        KV-pressure overload signal)."""
+        return self.pressure()["decode_kv_util"]
+
+    def _reroute_unstarted(self, inst, now: float):
+        if isinstance(inst, _PrefillInstance):
+            for r in list(inst.queue.items):
+                if r.rid in self._chunk_ctx or r.rid in self._sim_stream:
+                    continue        # mid-chunk: finish here
+                inst.queue.remove(r)
+                self._ev.push(now, "arrive", self._states[r.rid])
+            self._ev.push(now, "prefill_poke", inst)
+        elif isinstance(inst, _DecodeInstance):
+            D = [d for d in self._d_route() if d is not inst]
+            for r in list(inst.pending):
+                if r.rid in inst.granted or not D:
+                    continue        # pages/wire committed: drain here
+                inst.pending.remove(r)
+                # the parked wire bytes were fixed at park time, so the
+                # re-pick skips prefix hits (hit=0 in the decision log)
+                di = self.disp.pick_decode(r.rid, [d.load for d in D],
+                                           now=now)
+                nd = D[di]
+                if r.rid in self._sim_stream:
+                    self._sim_stream[r.rid] = nd
+                nd.pending.append(r)
+                self._states[r.rid].where = ("pending", nd)
+                self._ev.push(now, "decode_poke", nd)
+            if inst.absorb is not None:
+                for r in list(inst.absorb.items):
+                    if r.rid in inst.absorbing:
+                        continue    # partial chunks: finish here
+                    inst.absorb.remove(r)
+                    self._ev.push(now, "arrive", self._states[r.rid])
+            self._ev.push(now, "decode_poke", inst)
+        else:
+            for r in list(inst.waiting.items):
+                inst.waiting.remove(r)
+                self._ev.push(now, "arrive", self._states[r.rid])
+            self._ev.push(now, "poke", inst)
+
+    def _check_flip(self, inst, now: float):
+        if inst.target is None:
+            return
+        if isinstance(inst, _PrefillInstance):
+            if inst.queue.items or inst.inflight:
+                return
+        elif isinstance(inst, _DecodeInstance):
+            if (inst.busy or inst.load or inst.absorb.items
+                    or inst.absorbing):
+                return
+            assert inst.pool.used == 0, \
+                f"role flip with {inst.pool.used} pages resident"
+        else:
+            if inst.busy or inst.waiting.items or inst.running:
+                return
+        self._complete_flip(inst, now)
+
+    def _complete_flip(self, inst, now: float):
+        g = self.inst.index(inst)
+        role = inst.target
+        inst.target = None
+        inst.draining = False
+        twin = self._twins.pop((g, role), None)
+        if twin is None:
+            twin = self._make_instance(role, self._pars[g],
+                                       label=inst.label)
+        twin.draining = False
+        twin.target = None
+        self._twins[(g, self._role_of(inst))] = inst
+        self.inst[g] = twin
+        self._role_events.append((now, inst.label, role))
+        if self.tracer.enabled:
+            self.tracer.event("role_change", now, lane=inst.label,
+                              role=role)
+        # fresh capacity: poke so blocked global work can move
+        if isinstance(twin, _PrefillInstance):
+            self._ev.push(now, "prefill_poke", twin)
+        elif isinstance(twin, _DecodeInstance):
+            self._ev.push(now, "decode_poke", twin)
+        else:
+            self._ev.push(now, "poke", twin)
+        if self._backlog:
+            held, self._backlog = self._backlog, []
+            for st in held:
+                st.where = None
+                self._ev.push(now, "arrive", st)
+
     # -- cancellation ----------------------------------------------------
     def _do_cancel(self, state: RequestState, t: float):
         r = state.request
@@ -798,15 +1403,29 @@ class SimDisaggBackend(_SimBackend):
             return
         stage, loc = state.where
         if stage == "prefill":              # queued (incl. between chunks)
-            self.P[loc].queue.remove(r)
+            loc.queue.remove(r)
             if self.chunk_tokens:
                 self._drop_sim_stream(r, t)
                 self._chunk_ctx.pop(r.rid, None)
-                self._ev.push(t, "prefill_poke", self.P[loc])
+                self._ev.push(t, "prefill_poke", loc)
         elif stage == "prefill_run":        # in-flight prefill batch / chunk:
             pass                            # the done handler drops it
+        elif stage == "backlog":            # held during a re-role drain
+            self._backlog = [st for st in self._backlog
+                             if st.rid != r.rid]
+        elif stage == "queued":             # mixed-engine waiting queue
+            loc.waiting.remove(r)
+        elif stage == "absorb":             # absorb queue (incl. partials)
+            loc.absorb.remove(r)
+            if r.rid in loc.absorbing:
+                loc.absorbing.discard(r.rid)
+                loc.pool.free(r.rid)
+            self._chunk_ctx.pop(r.rid, None)
+            self._ev.push(t, "decode_poke", loc)
+        elif stage == "absorb_run":         # mid-chunk: handler cleans up
+            pass
         elif stage == "pending":            # parked, unassigned pages
-            d = self.D[loc]
+            d = loc
             if r in d.pending:
                 d.pending.remove(r)
             if r.rid in d.granted:          # finalized after a grant
@@ -815,24 +1434,30 @@ class SimDisaggBackend(_SimBackend):
             self.tx.cancel(r.rid)           # drops chunk segments too
             self._ev.push(t, "decode_poke", d)  # head may admit now
         elif stage == "transfer":           # on the wire: pages reserved
-            d = self.D[loc]
+            d = loc
             d.pool.free(r.rid)
             d.in_transfer -= 1
             self._ev.push(t, "decode_poke", d)
         elif stage == "arrived":
-            d = self.D[loc]
+            d = loc
             if r in d.arrived:
                 d.arrived.remove(r)
             d.kv_full.pop(r.rid, None)
             d.pool.free(r.rid)
             self._ev.push(t, "decode_poke", d)
         elif stage == "running":
-            d = self.D[loc]
-            if r in d.running:
-                d.running.remove(r)
-            d.kv_full.pop(r.rid, None)
-            d.pool.free(r.rid)
-            self._ev.push(t, "decode_poke", d)
+            if isinstance(loc, _ColoEngine):
+                if r in loc.running:
+                    loc.running.remove(r)
+                loc.kv_used -= _req_kv_bytes(self.lm, r)
+                self._ev.push(t, "poke", loc)
+            else:
+                d = loc
+                if r in d.running:
+                    d.running.remove(r)
+                d.kv_full.pop(r.rid, None)
+                d.pool.free(r.rid)
+                self._ev.push(t, "decode_poke", d)
 
     # -- metrics ---------------------------------------------------------
     def extras(self) -> Dict:
@@ -851,6 +1476,11 @@ class SimDisaggBackend(_SimBackend):
                           "decode_busy_s": self.busy_decode,
                           **self._breakdown},
         }
+        if self.busy_absorb or self.absorbed:
+            extras["breakdown"]["absorb_busy_s"] = self.busy_absorb
+            extras["absorbed"] = self.absorbed
+        if self._role_events:
+            extras["role_events"] = list(self._role_events)
         if self.prefix_on:
             extras["prefix"] = {
                 "hit_tokens": sum(r.prefix_hit for r in reqs),
@@ -883,14 +1513,20 @@ def simulate_disaggregated(
 
 
 # ---------------------------------------------------------------------------
-# Colocated (vLLM-like) simulation
+# Mixed-role engine state + legacy shims
 # ---------------------------------------------------------------------------
 
 class _ColoEngine:
-    def __init__(self, iid, max_b: float, cap: float):
+    """Continuous-batching engine state for a ``"mixed"``-role instance
+    (vLLM-like prefill-priority; the degenerate colocated deployment is
+    every instance carrying this role)."""
+
+    def __init__(self, iid, max_b: float, cap: float,
+                 par: Optional[Parallelism] = None):
         self.iid = iid
         self.max_b = max_b
         self.cap = cap
+        self.par = par or Parallelism()
         self.waiting: FCFSQueue = FCFSQueue(token_of=lambda r: r.in_len)
         self.running: List[Request] = []
         self.kv_used = 0.0
@@ -901,9 +1537,23 @@ class _ColoEngine:
         return len(self.waiting) + len(self.running)
 
 
-class SimColocatedBackend(_SimBackend):
+class SimDisaggBackend(SimServingBackend):
+    """Legacy disaggregated entrypoint: ``(lm, prefill_cfg, decode_cfg)``
+    translated to a prefill+decode role vector over the role-unified
+    `SimServingBackend`. Schedules, token timestamps, dispatch decisions
+    and metric keys are byte-identical to the pre-unification class."""
+
+    def __init__(self, lm: LatencyModel, prefill: InstanceConfig,
+                 decode: InstanceConfig, **kwargs):
+        roles = ([("prefill", prefill.par)] * prefill.count
+                 + [("decode", decode.par)] * decode.count)
+        super().__init__(lm, roles, **kwargs)
+
+
+class SimColocatedBackend(SimServingBackend):
     """Continuous batching with prefill-priority (vLLM v0 default),
-    behind the ServingBackend protocol."""
+    behind the ServingBackend protocol — the degenerate "all instances
+    mixed" case of the role-unified `SimServingBackend`."""
 
     def __init__(self, lm: LatencyModel, inst: InstanceConfig, *,
                  max_batch: Optional[int] = None,
@@ -914,153 +1564,15 @@ class SimColocatedBackend(_SimBackend):
                  record_events: bool = True,
                  tracer=None,
                  metrics=None):
-        self._init_sim(horizon, record_events, tracker,
-                       tracer=tracer, metrics=metrics)
-        self.lm = lm
+        super().__init__(lm, [("mixed", inst.par)] * inst.count,
+                         max_mixed_batch=max_batch,
+                         max_prefill_tokens=max_prefill_tokens,
+                         kv_reserve=kv_reserve,
+                         prefix_cache=False,
+                         horizon=horizon, tracker=tracker,
+                         record_events=record_events,
+                         tracer=tracer, metrics=metrics)
         self.par = inst.par
-        self.max_prefill_tokens = max_prefill_tokens
-        max_b = max_batch or 4096
-        cap = (lm.chip.hbm_bytes * inst.par.num_chips * (1 - kv_reserve)
-               - lm.param_bytes())
-        cap = max(cap, lm.chip.hbm_bytes * 0.05 * inst.par.num_chips)
-        self.engines = [_ColoEngine(i, max_b, cap)
-                        for i in range(inst.count)]
-        if metrics is not None:
-            metrics.register(self._collect_metrics)
-
-    def _collect_metrics(self):
-        out = {}
-        for e in self.engines:
-            out[f"engine{e.iid}.queue.depth"] = float(len(e.waiting))
-            out[f"engine{e.iid}.running"] = float(len(e.running))
-            out[f"engine{e.iid}.kv_used_bytes"] = float(e.kv_used)
-        return out
-
-    # -- ServingBackend hooks -------------------------------------------
-    def _do_submit(self, state: RequestState, t: float):
-        self._cap_out(state)
-        self._ev.push(t, "arrive", state)
-
-    def _handle(self, t: float, kind: str, payload: Any):
-        if kind == "arrive":
-            self._on_arrive(payload, t)
-        elif kind == "prefill_done":
-            self._on_prefill_done(payload, t)
-        elif kind == "decode_iter":
-            self._on_decode_iter(payload, t)
-        elif kind == "poke":
-            self._step_engine(payload, t)
-
-    def _on_arrive(self, state: RequestState, t: float):
-        if state.done:
-            return
-        e = self.engines[least_loaded([x.load for x in self.engines])]
-        e.waiting.push(state.request)
-        state.where = ("queued", e)
-        if self.tracer.enabled:
-            self.tracer.phase(state.rid, "queued", t, f"engine{e.iid}")
-        self._step_engine(e, t)
-
-    def _step_engine(self, e: _ColoEngine, now: float):
-        if e.busy:
-            return
-        # prefill first (vLLM prioritizes waiting prefills), batch formed
-        # by the shared core; the stateful can_take reserves KV as it admits
-        taken = [0, 0.0]
-
-        def can_take(r):
-            if (len(e.running) + taken[0] < e.max_b
-                    and e.kv_used + taken[1]
-                    + _req_kv_bytes(self.lm, r) <= e.cap):
-                taken[0] += 1
-                taken[1] += _req_kv_bytes(self.lm, r)
-                return True
-            return False
-
-        batch = e.waiting.form_batch(self.max_prefill_tokens,
-                                     can_take=can_take)
-        if batch:
-            e.kv_used += taken[1]
-            e.busy = True
-            T = self.lm.prefill_time([r.in_len for r in batch], self.par)
-            for r in batch:
-                r.prefill_start = now
-                st = self._states[r.rid]
-                st.where = ("prefill_run", e)
-                st.to_status(RequestStatus.PREFILLING)
-                if self.tracer.enabled:
-                    lane = f"engine{e.iid}"
-                    self.tracer.phase(r.rid, "prefilling", now, lane)
-                    self.tracer.complete(
-                        "compute", "prefill_batch", now, now + T, lane,
-                        rid=r.rid, tokens=r.in_len, hit=0)
-            self._ev.push(now + T, "prefill_done", (e, batch))
-            return
-        if e.running:
-            e.busy = True
-            eff_b = max(len(e.running) / self.par.pp, 1.0)
-            ctx = sum(r.in_len + r.tokens_done for r in e.running)
-            tau = self.lm.decode_time(eff_b, ctx / self.par.pp,
-                                      Parallelism(self.par.tp, 1))
-            if self.tracer.enabled:
-                self.tracer.complete("step", "decode_step", now, now + tau,
-                                     f"engine{e.iid}",
-                                     batch=len(e.running), compute=tau)
-            self._ev.push(now + tau, "decode_iter", (e, tau))
-
-    def _on_prefill_done(self, payload, t: float):
-        e, batch = payload
-        e.busy = False
-        for r in batch:
-            state = self._states[r.rid]
-            if state.done:              # cancelled mid-prefill
-                e.kv_used -= _req_kv_bytes(self.lm, r)
-                continue
-            r.first_token = t
-            r.decode_admit = t
-            self._emit_token(state, -1, t)
-            state.where = ("running", e)
-            state.to_status(RequestStatus.DECODING)
-            if self.tracer.enabled:
-                self.tracer.phase(r.rid, "decoding", t, f"engine{e.iid}")
-            e.running.append(r)
-        self._step_engine(e, t)
-
-    def _on_decode_iter(self, payload, t: float):
-        e, tau = payload
-        e.busy = False
-        rec = self._recording
-        ontoken = self._ontoken_rids
-        cap = self._out_cap
-        still = []
-        for r in e.running:
-            r.tokens_done += 1
-            out_eff = cap[r.rid] if r.rid in cap else r.out_len
-            if rec or r.rid in ontoken:
-                self._emit_token(self._states[r.rid], -1, t)
-            if r.tokens_done >= out_eff - 1 or out_eff <= 1:
-                self._finish_state(self._states[r.rid], t)
-                e.kv_used -= _req_kv_bytes(self.lm, r)
-            else:
-                still.append(r)
-        e.running = still
-        self._step_engine(e, t)
-
-    # -- cancellation ----------------------------------------------------
-    def _do_cancel(self, state: RequestState, t: float):
-        r = state.request
-        if state.where is None:
-            return
-        stage, e = state.where
-        if stage == "queued":
-            e.waiting.remove(r)
-        elif stage == "prefill_run":
-            pass        # prefill_done releases the KV reservation
-        elif stage == "running":
-            if r in e.running:
-                e.running.remove(r)
-            e.kv_used -= _req_kv_bytes(self.lm, r)
-            self._ev.push(t, "poke", e)
 
     def extras(self) -> Dict:
         return {"kv_total": 0.0, "kv_p95": 0.0, "breakdown": {},
@@ -1077,6 +1589,23 @@ def simulate_colocated(
     `simulate_disaggregated`."""
     kwargs.setdefault("record_events", False)
     backend = SimColocatedBackend(lm, inst, **kwargs)
+    for r in reqs:
+        backend.submit(r)
+    backend.drain()
+    return reqs, backend.extras()
+
+
+def simulate_roles(
+        reqs: List[Request],
+        lm: LatencyModel,
+        par: Parallelism,
+        roles: Sequence[str],
+        **kwargs) -> Tuple[List[Request], Dict]:
+    """Closed-world shim over the role-unified backend for an arbitrary
+    per-instance role vector (placement `mode_search` evaluates candidate
+    vectors through this). Keyword knobs as in `SimServingBackend`."""
+    kwargs.setdefault("record_events", False)
+    backend = SimServingBackend(lm, [(r, par) for r in roles], **kwargs)
     for r in reqs:
         backend.submit(r)
     backend.drain()

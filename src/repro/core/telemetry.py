@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import re
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -74,12 +75,15 @@ class SpanEvent:
 
 @dataclasses.dataclass
 class Instant:
-    """Global instant event (token emission, routing decision, ...)."""
+    """Global instant event (token emission, routing decision, ...).
+    `wall_t` is the optional wall-clock stamp (None unless the tracer
+    carries a `wall_clock` source)."""
     name: str
     t: float
     rid: Optional[int] = None
     lane: Optional[str] = None
     args: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    wall_t: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -92,6 +96,9 @@ class Span:
     t1: Optional[float] = None
     args: Dict[str, Any] = dataclasses.field(default_factory=dict)
     events: List[SpanEvent] = dataclasses.field(default_factory=list)
+    # wall-clock stamps (opt-in; virtual t0/t1 stay the span's identity)
+    wall_t0: Optional[float] = None
+    wall_t1: Optional[float] = None
 
     @property
     def open(self) -> bool:
@@ -154,16 +161,27 @@ class Tracer:
     tokens, timings, or routing (it only filters what is *recorded*).
     Spans without a rid (decode step spans, batch-level compute) are
     instance-scoped, not request-scoped, and are always kept.
+
+    `wall_clock` (opt-in, e.g. ``time.time``) adds wall-clock stamps
+    alongside the virtual timestamps: spans gain `wall_t0`/`wall_t1`
+    (sampled at `begin`/`end` call time), instants gain `wall_t`.
+    Virtual time stays the identity — parity diffs and the phase state
+    machine never look at wall stamps — but an exported trace carries
+    both, so a live run can be lined up against real elapsed time (and
+    a sim run against search wall-cost). Default None: no stamps, no
+    per-event clock reads, byte-identical traces to before the knob.
     """
     enabled = True
 
-    def __init__(self, sample_rate: float = 1.0, sample_seed: int = 0):
+    def __init__(self, sample_rate: float = 1.0, sample_seed: int = 0,
+                 wall_clock: Optional[Callable[[], float]] = None):
         self.spans: List[Span] = []
         self.instants: List[Instant] = []
         self.terminals: Dict[int, Tuple[str, float]] = {}
         self._open_phase: Dict[int, Span] = {}
         self.sample_rate = float(sample_rate)
         self.sample_seed = int(sample_seed)
+        self.wall_clock = wall_clock
 
     def sampled(self, rid: Optional[int]) -> bool:
         """Per-request keep-all decision (deterministic rid hash)."""
@@ -181,6 +199,8 @@ class Tracer:
     def begin(self, cat: str, name: str, t: float, lane: str,
               rid: Optional[int] = None, **args) -> Span:
         sp = Span(cat, name, lane, t, rid=rid, args=args)
+        if self.wall_clock is not None:
+            sp.wall_t0 = float(self.wall_clock())
         if self.sampled(rid):
             self.spans.append(sp)
         return sp
@@ -193,6 +213,9 @@ class Tracer:
             raise ValueError(f"span ends before it starts: {span.name} "
                              f"{t} < {span.t0}")
         span.t1 = t
+        if self.wall_clock is not None:
+            span.wall_t1 = max(float(self.wall_clock()),
+                               span.wall_t0 or -math.inf)
         if args:
             span.args.update(args)
 
@@ -204,7 +227,10 @@ class Tracer:
 
     def event(self, name: str, t: float, rid: Optional[int] = None,
               lane: Optional[str] = None, **args):
-        self.instants.append(Instant(name, t, rid=rid, lane=lane, args=args))
+        wall = (float(self.wall_clock())
+                if self.wall_clock is not None else None)
+        self.instants.append(Instant(name, t, rid=rid, lane=lane, args=args,
+                                     wall_t=wall))
 
     # -- per-request phase state machine --------------------------------
     def phase(self, rid: int, name: str, t: float, lane: str, **args):
@@ -495,6 +521,10 @@ def to_chrome_trace(tracer: Tracer,
         args = {k: v for k, v in s.args.items()}
         if s.rid is not None:
             args["rid"] = s.rid
+        if s.wall_t0 is not None:
+            args["wall_t0"] = s.wall_t0
+            if s.wall_t1 is not None:
+                args["wall_t1"] = s.wall_t1
         ev = {"name": s.name, "cat": s.cat, "ph": "X", "ts": s.t0 * _US,
               "dur": (s.dur if not s.open else 0.0) * _US,
               "pid": pid_of[s.lane], "tid": 0, "args": args}
@@ -517,6 +547,8 @@ def to_chrome_trace(tracer: Tracer,
         args = dict(i.args)
         if i.rid is not None:
             args["rid"] = i.rid
+        if i.wall_t is not None:
+            args["wall_t"] = i.wall_t
         events.append({"name": i.name, "cat": "instant", "ph": "i",
                        "s": "t", "ts": i.t * _US, "pid": pid_of[lane],
                        "tid": 0, "args": args})
@@ -588,6 +620,15 @@ def validate_chrome_trace(doc: Any) -> List[str]:
             errors.append(f"{where}: non-monotone ts {ts} < {last_ts}")
         last_ts = ts
         key = (ev.get("pid"), ev.get("tid"))
+        args = ev.get("args") or {}
+        for wk in ("wall_t0", "wall_t1", "wall_t"):
+            if wk in args and not isinstance(args[wk], (int, float)):
+                errors.append(f"{where}: non-numeric {wk} {args[wk]!r}")
+        if isinstance(args.get("wall_t0"), (int, float)) and \
+                isinstance(args.get("wall_t1"), (int, float)) and \
+                args["wall_t1"] < args["wall_t0"]:
+            errors.append(f"{where}: wall_t1 {args['wall_t1']} < "
+                          f"wall_t0 {args['wall_t0']}")
         if ph == "X":
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:

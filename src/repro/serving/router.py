@@ -73,7 +73,7 @@ __all__ = [
     "SessionAffinityPolicy", "ShortestQueuePolicy", "LeastLoadedPolicy",
     "make_policy", "POLICIES", "OverloadDetector", "ReplicaHandle",
     "FleetRouter", "aggregate_snapshots", "elastic_callback", "fleet_search",
-    "FleetPlan",
+    "FleetPlan", "replica_kv_utilization",
 ]
 
 
@@ -289,32 +289,64 @@ def make_policy(name: str, **kwargs) -> RoutingPolicy:
 # overload detection + replicas
 # ---------------------------------------------------------------------------
 
+def replica_kv_utilization(backend) -> float:
+    """Decode KV page-pool occupancy of a replica, in [0, 1].
+
+    Prefers the replica's `MetricsRegistry`: every paged engine/pool
+    collector exports ``<instance>.kv.used_pages`` / ``.kv.num_pages``
+    pairs, and the replica's occupancy is the max over its instances —
+    the same signal an external autoscaler would scrape. Falls back to
+    the backend's own `kv_utilization()` when no registry is attached
+    (the common in-process case), 0.0 when neither exists."""
+    reg = getattr(backend, "metrics", None)
+    if reg is not None:
+        snap = reg.snapshot()
+        best, found = 0.0, False
+        for k, v in snap.items():
+            if k.endswith(".kv.num_pages") and v > 0:
+                used = snap.get(k[:-len("num_pages")] + "used_pages")
+                if used is not None:
+                    found = True
+                    best = max(best, used / v)
+        if found:
+            return best
+    fn = getattr(backend, "kv_utilization", None)
+    return float(fn()) if fn is not None else 0.0
+
+
 @dataclasses.dataclass
 class OverloadDetector:
     """Per-replica admission gate + router-queue shedding policy.
 
     A replica is overloaded at `max_inflight` outstanding requests
-    (router-side count, deterministic in both worlds) or — when
+    (router-side count, deterministic in both worlds), or — when
     `max_replica_queue` is set — when that many of its requests still sit
     QUEUED inside it (the queue-depth signal its metrics collector
-    exports; re-evaluated at arrival/dispatch boundaries). The router
-    queue sheds arrivals past `max_queue` outright, and sheds a queued
-    request once it has waited `shed_after_s` (`from_slo` derives that
-    deadline as a fraction of the TTFT SLO: past it the request could not
-    meet its SLO even with an instant prefill, so shedding it protects
-    the admitted requests' attainment instead of cascading the overload).
+    exports; re-evaluated at arrival/dispatch boundaries), or — when
+    `max_kv_util` is set — when its decode KV page-pool occupancy
+    (`replica_kv_utilization`) reaches that fraction: queue depth misses
+    memory-bound overload, where a few long-context requests fill the
+    page pool while the queues look empty. The router queue sheds
+    arrivals past `max_queue` outright, and sheds a queued request once
+    it has waited `shed_after_s` (`from_slo` derives that deadline as a
+    fraction of the TTFT SLO: past it the request could not meet its SLO
+    even with an instant prefill, so shedding it protects the admitted
+    requests' attainment instead of cascading the overload).
     """
     max_inflight: int = 64
     max_queue: int = 4096
     shed_after_s: Optional[float] = None
     max_replica_queue: Optional[int] = None
+    max_kv_util: Optional[float] = None
 
     @classmethod
     def from_slo(cls, slo_ttft: float, *, headroom: float = 0.5,
-                 max_inflight: int = 64, max_queue: int = 4096
+                 max_inflight: int = 64, max_queue: int = 4096,
+                 max_kv_util: Optional[float] = None
                  ) -> "OverloadDetector":
         return cls(max_inflight=max_inflight, max_queue=max_queue,
-                   shed_after_s=slo_ttft * headroom)
+                   shed_after_s=slo_ttft * headroom,
+                   max_kv_util=max_kv_util)
 
     def overloaded(self, rep: "ReplicaHandle") -> bool:
         if rep.inflight >= self.max_inflight:
@@ -325,6 +357,9 @@ class OverloadDetector:
                          is RequestStatus.QUEUED)
             if queued >= self.max_replica_queue:
                 return True
+        if self.max_kv_util is not None and \
+                replica_kv_utilization(rep.backend) >= self.max_kv_util:
+            return True
         return False
 
 
@@ -636,10 +671,13 @@ def aggregate_snapshots(named: Dict[str, Dict[str, float]]
 @dataclasses.dataclass
 class FleetPlan:
     """What `fleet_search` hands back to the `Replanner`: how many
-    replicas the refitted workload needs at the observed rate."""
+    replicas the refitted workload needs at the observed rate, plus —
+    when the search also ran the mode axis — the per-instance role
+    vector each replica should reconcile to (`apply_roles`)."""
     replicas: int
     rate: float
     per_replica: float          # one replica's goodput (req/s)
+    roles: Optional[List[str]] = None
 
 
 def elastic_callback(make_backend: Callable[[int], Any],
@@ -647,7 +685,12 @@ def elastic_callback(make_backend: Callable[[int], Any],
                      max_replicas: int = 64) -> Callable:
     """Build a `FleetRouter(on_replan=...)` callback that resizes the
     fleet to the plan's replica count: grows with `make_backend(idx)`,
-    shrinks by draining the newest routable replicas first."""
+    shrinks by draining the newest routable replicas first. A plan that
+    carries a role vector (`FleetPlan.roles`) additionally *re-roles*
+    every routable role-unified replica in place via `apply_roles` —
+    capacity moves between prefill and decode without tearing a replica
+    down (new replicas from `make_backend` are expected to be born with
+    the planned roles)."""
     def cb(router: FleetRouter, plan):
         want = size_of(plan) if size_of is not None else (
             plan.replicas if isinstance(plan, FleetPlan) else int(plan))
@@ -659,28 +702,58 @@ def elastic_callback(make_backend: Callable[[int], Any],
         elif want < len(routable):
             for i in reversed(routable[want:]):
                 router.drain_replica(i)
+        roles = getattr(plan, "roles", None)
+        if roles:
+            for rep in router.replicas:
+                apply = getattr(rep.backend, "apply_roles", None)
+                if rep.routable and apply is not None:
+                    apply(roles)
     return cb
 
 
 def fleet_search(lm, prefill, decode, *, target: float = 0.9,
                  n_requests: int = 200, slo_scale: float = 1.0,
-                 max_replicas: int = 64, **sim_kwargs) -> Callable:
-    """`Replanner` search callback for a fleet of identical disaggregated
-    replicas: per-replica goodput via the simulator (`max_goodput`, the
-    paper's placement-search primitive) at the refitted spec, fleet size
-    = ceil(observed rate / per-replica goodput)."""
+                 max_replicas: int = 64, search_modes: bool = False,
+                 **sim_kwargs) -> Callable:
+    """`Replanner` search callback for a fleet of identical replicas:
+    per-replica goodput via the simulator (`max_goodput`, the paper's
+    placement-search primitive) at the refitted spec, fleet size =
+    ceil(observed rate / per-replica goodput).
+
+    With ``search_modes=True`` the per-replica deployment *mode* becomes
+    a search axis too (`core.placement.mode_search`): the replica's
+    instances keep their count and parallelism but the prefill/decode/
+    mixed role vector is re-chosen for the refitted workload, and the
+    winning vector rides on the plan — `elastic_callback` then re-roles
+    the existing replicas in place instead of rebuilding them."""
     from ..core.goodput import max_goodput
-    from ..core.simulator import simulate_disaggregated
+    from ..core.simulator import simulate_disaggregated, simulate_roles
 
     def search(spec, rate: float) -> FleetPlan:
-        def run(reqs):
-            return simulate_disaggregated(reqs, lm, prefill, decode,
-                                          **sim_kwargs)
+        roles = None
+        if search_modes:
+            from ..core.placement import mode_search
+            mp = mode_search(
+                lm, spec, rate=rate, par=prefill.par,
+                n_instances=prefill.count + decode.count,
+                transfer_bw=sim_kwargs.get("transfer_bw", 50e9),
+                chunk_tokens=sim_kwargs.get("chunk_tokens"),
+                absorb_tokens=sim_kwargs.get("absorb_tokens"),
+                n_requests=n_requests, seed=0)
+            roles = mp.roles
+
+            def run(reqs):
+                return simulate_roles(reqs, lm, prefill.par, roles,
+                                      **sim_kwargs)
+        else:
+            def run(reqs):
+                return simulate_disaggregated(reqs, lm, prefill, decode,
+                                              **sim_kwargs)
         chips = (prefill.count * prefill.par.num_chips
                  + decode.count * decode.par.num_chips)
         gp = max_goodput(run, spec, chips, target=target,
                          n_requests=n_requests, slo_scale=slo_scale)
         per = max(gp.rate, 1e-9)
         return FleetPlan(min(max(math.ceil(rate / per), 1), max_replicas),
-                         rate, per)
+                         rate, per, roles=roles)
     return search

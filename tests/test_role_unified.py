@@ -1,0 +1,449 @@
+"""Role-unified serving: per-instance prefill/decode/mixed roles as
+runtime state, in both worlds.
+
+Pins, in rough order of load-bearing-ness:
+
+- legacy shim identity: the disagg/colocated entrypoints are role
+  vectors over the unified backends and schedule byte-identically;
+- sim == live parity (live under the deterministic `EngineCharge`)
+  for the *dynamic* paths — a mid-run role flip and chunked-prefill
+  absorption — compared on per-request token timestamps (the decision
+  *indices* legitimately differ across worlds while an instance drains:
+  the live fleet keeps failed/draining instances in the candidate list
+  with an `alive` mask, the sim filters them out);
+- role flips never leak KV: a drain-completed decode->prefill flip
+  asserts an empty page pool, and a randomized flip fuzz on the live
+  cluster checks the allocator invariants after drain;
+- `RoleController` hysteresis: backlog flips a decode instance to
+  prefill, KV pressure flips one back, cooldown and floors hold;
+- `mode_search` returns the best role vector and `fleet_search
+  (search_modes=True)` + `elastic_callback` re-role a live fleet;
+- hierarchical fleets: a router-of-routers is a `ServingBackend` like
+  any other — deterministic decisions, same results as its flat
+  equivalent, leak-free drain.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.core.latency_model import EngineCharge, LatencyModel, Parallelism
+from repro.core.placement import ModePlacement, mode_candidates, mode_search
+from repro.core.replan import RoleController
+from repro.core.simulator import (InstanceConfig, SimColocatedBackend,
+                                  SimDisaggBackend, SimServingBackend,
+                                  simulate_roles)
+from repro.core.telemetry import MetricsRegistry
+from repro.core.workload import SHAREGPT, Request
+from repro.models.api import build_model
+from repro.serving.cluster import (ColocatedCluster, DisaggCluster,
+                                   ServingCluster)
+from repro.serving.router import (FleetPlan, FleetRouter, OverloadDetector,
+                                  elastic_callback, fleet_search,
+                                  replica_kv_utilization)
+
+CFG = get_config("yi-6b-smoke")
+LM = LatencyModel(CFG, hw.V5E)          # smoke scale: paired with live
+LM_FULL = LatencyModel(get_config("yi-6b"), hw.V5E)     # sim-only
+PAR = Parallelism(1, 1)
+SLOW_BW = 1e3
+
+
+@pytest.fixture(scope="module")
+def params():
+    return build_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def _trace(n=6, gap=3.0, in_len=48, out_len=4):
+    return [Request(i, i * gap, in_len, out_len) for i in range(n)]
+
+
+def _submit_run(backend, reqs, flips=()):
+    """Run a trace with optional timed role flips ((t, g, role), ...)."""
+    for r in reqs:
+        backend.submit(dataclasses.replace(r))
+    for t, g, role in sorted(flips):
+        backend.run_until(t)
+        backend.set_role(g, role, now=t)
+    backend.drain()
+    return backend
+
+
+def _token_times(backend):
+    return {rid: [e.t for e in st.events]
+            for rid, st in backend.states.items()}
+
+
+def _assert_live_no_leaks(c: ServingCluster):
+    assert not c.tx.parked, "parked transfers leaked"
+    for e in (*c.prefill, *c.decode, *c.engines):
+        assert len(e._slot_free) == e.max_batch, "batch slot leaked"
+        if e._kv is None:
+            continue
+        kv = e._kv
+        free = set(kv._free)
+        assert len(free) + len(kv._refcnt) == kv.num_pages - 1
+        assert free.isdisjoint(kv._refcnt)
+        tree_pages = (e.prefix_cache.pages_in_tree()
+                      if e.prefix_caching else [])
+        assert kv.used_pages == len(set(tree_pages))
+        assert not kv._tables, f"block tables leaked: {kv._tables}"
+
+
+# ---------------- legacy shims == role vectors -----------------------------
+
+def test_sim_disagg_shim_is_role_vector():
+    reqs = _trace(8, gap=0.4, out_len=8)
+    legacy = _submit_run(SimDisaggBackend(
+        LM_FULL, InstanceConfig(PAR, 2), InstanceConfig(PAR, 2),
+        transfer_bw=SLOW_BW), reqs)
+    unified = _submit_run(SimServingBackend(
+        LM_FULL, [("prefill", PAR)] * 2 + [("decode", PAR)] * 2,
+        transfer_bw=SLOW_BW), reqs)
+    assert _token_times(legacy) == _token_times(unified)
+    assert legacy.disp.decisions == unified.disp.decisions
+
+
+def test_sim_colocated_shim_is_all_mixed():
+    reqs = _trace(8, gap=0.4, out_len=8)
+    legacy = _submit_run(SimColocatedBackend(
+        LM_FULL, InstanceConfig(PAR, 2)), reqs)
+    unified = _submit_run(SimServingBackend(
+        LM_FULL, [("mixed", PAR)] * 2, prefix_cache=False), reqs)
+    assert _token_times(legacy) == _token_times(unified)
+
+
+def test_live_disagg_shim_is_role_vector(params):
+    reqs = _trace(4, gap=2.0)
+    kw = dict(max_len=128, lm_tokens=128, transfer_bandwidth=SLOW_BW,
+              charge=EngineCharge(LM, PAR), seed=0)
+    legacy = _submit_run(DisaggCluster(CFG, params, n_prefill=1,
+                                       n_decode=1, **kw), reqs)
+    unified = _submit_run(ServingCluster(CFG, params,
+                                         ["prefill", "decode"], **kw), reqs)
+    assert _token_times(legacy) == _token_times(unified)
+    assert legacy.dispatcher.decisions == unified.dispatcher.decisions
+    for rid, res in legacy.results.items():
+        assert res.tokens == unified.results[rid].tokens, rid
+    _assert_live_no_leaks(legacy)
+    _assert_live_no_leaks(unified)
+
+
+def test_live_colocated_shim_is_all_mixed(params):
+    reqs = _trace(4, gap=2.0)
+    kw = dict(max_len=128, charge=EngineCharge(LM, PAR), seed=0)
+    legacy = _submit_run(ColocatedCluster(CFG, params, n_engines=2, **kw),
+                         reqs)
+    unified = _submit_run(ServingCluster(CFG, params, ["mixed", "mixed"],
+                                         **kw), reqs)
+    assert _token_times(legacy) == _token_times(unified)
+    for rid, res in legacy.results.items():
+        assert res.tokens == unified.results[rid].tokens, rid
+
+
+# ---------------- dynamic paths: sim == live under EngineCharge ------------
+
+FLIP_KW = dict(lm_tokens=128, chunk_tokens=32, max_prefill_tokens=512)
+
+
+def _live_flip(params, roles, reqs, flips, **kw):
+    c = ServingCluster(CFG, params, list(roles), max_len=128,
+                       transfer_bandwidth=SLOW_BW,
+                       charge=EngineCharge(LM, PAR), seed=0,
+                       **FLIP_KW, **kw)
+    return _submit_run(c, reqs, flips)
+
+
+def _sim_flip(roles, reqs, flips, **kw):
+    b = SimServingBackend(LM, [(r, PAR) for r in roles],
+                          transfer_bw=SLOW_BW, **FLIP_KW, **kw)
+    return _submit_run(b, reqs, flips)
+
+
+def test_reroling_parity_sim_vs_live(params):
+    """decode->prefill (drains, pool must empty) then prefill->decode
+    (immediate) mid-trace: both worlds emit float-identical token
+    timestamps, and the role-change logs line up."""
+    reqs = _trace(6, gap=4.0)
+    flips = [(9.0, 2, "prefill"), (17.0, 0, "decode")]
+    live = _live_flip(params, ["prefill", "decode", "decode"], reqs, flips)
+    sim = _sim_flip(["prefill", "decode", "decode"], reqs, flips)
+    assert live.roles == sim.roles == ["decode", "decode", "prefill"]
+    assert _token_times(live) == _token_times(sim)
+    assert ([(t, role) for t, _lane, role in live.extras()["role_events"]]
+            == [(t, role) for t, _lane, role in sim.extras()["role_events"]])
+    assert all(st.done for st in live.states.values())
+    for res in live.results.values():
+        assert res.finish_reason == "length"
+    _assert_live_no_leaks(live)
+
+
+def test_absorption_parity_sim_vs_live(params):
+    """Prefill saturation spills whole prompts to the decode instance,
+    which chunk-prefills them in place: same absorbed count, same
+    timestamps in both worlds."""
+    reqs = [Request(0, 0.0, 96, 4), Request(1, 0.0, 96, 4),
+            Request(2, 0.0, 64, 4), Request(3, 8.0, 48, 4)]
+    live = _live_flip(params, ["prefill", "decode"], reqs, (),
+                      absorb_tokens=64)
+    sim = _sim_flip(["prefill", "decode"], reqs, (), absorb_tokens=64)
+    assert live.extras().get("absorbed", 0) > 0
+    assert live.extras().get("absorbed") == sim.extras().get("absorbed")
+    absorbs = [d for d in live.dispatcher.decisions if d[0] == "absorb"]
+    assert absorbs and absorbs == [d for d in sim.disp.decisions
+                                   if d[0] == "absorb"]
+    assert _token_times(live) == _token_times(sim)
+    _assert_live_no_leaks(live)
+
+
+# ---------------- role flips never leak pages ------------------------------
+
+def test_decode_flip_empties_pool_sim():
+    be = SimServingBackend(LM_FULL, [("prefill", PAR), ("decode", PAR),
+                                     ("decode", PAR)], transfer_bw=SLOW_BW)
+    for r in _trace(6, gap=0.5, out_len=16):
+        be.submit(r)
+    be.run_until(2.0)
+    be.set_role(1, "prefill")           # mid-decode: drains in place
+    be.drain()
+    assert be.roles[1] == "prefill"
+    for d in be.D:
+        assert d.pool.used == 0
+    assert all(s.done for s in be.states.values())
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_role_flip_fuzz_no_leaks_live(params, seed):
+    """Randomized mid-run flips on a live 3-instance fleet: every
+    request still finishes, every page comes back."""
+    rng = np.random.default_rng(seed)
+    roles = ["prefill", "decode", "decode"]
+    c = ServingCluster(CFG, params, roles, max_len=128,
+                       transfer_bandwidth=SLOW_BW,
+                       charge=EngineCharge(LM, PAR), seed=seed,
+                       **FLIP_KW, absorb_tokens=256)
+    reqs = [Request(i, float(rng.uniform(0, 12.0)), int(rng.integers(24, 72)),
+                    int(rng.integers(2, 6))) for i in range(6)]
+    for r in sorted(reqs, key=lambda r: r.arrive):
+        c.submit(r)
+    for t in sorted(rng.uniform(1.0, 20.0, size=3)):
+        c.run_until(float(t))
+        g = int(rng.integers(0, 3))
+        role = ["prefill", "decode", "mixed"][int(rng.integers(0, 3))]
+        try:
+            c.set_role(g, role, now=float(t))
+        except ValueError:
+            pass                        # flip would strand arrivals: skipped
+    c.drain()
+    assert all(st.done for st in c.states.values())
+    for res in c.results.values():
+        assert res.finish_reason == "length"
+    _assert_live_no_leaks(c)
+
+
+# ---------------- RoleController hysteresis --------------------------------
+
+def test_role_controller_flips_on_backlog_and_respects_floors():
+    be = SimServingBackend(LM_FULL, [("prefill", PAR), ("decode", PAR),
+                                     ("decode", PAR)],
+                           chunk_tokens=160, absorb_tokens=1 << 30)
+    rc = RoleController(be, prefill_high=500.0, cooldown_s=0.5,
+                        min_decode=1)
+    for i in range(20):
+        be.submit(Request(i, 0.0, 700, 4))
+    be.run_until(0.01)
+    now = be._ev.now
+    assert rc.tick(now) == (2, "prefill")       # backlog: donate a decode
+    assert rc.tick(now + 0.1) is None           # cooldown
+    assert rc.tick(now + 5.0) is None           # min_decode floor holds
+    assert rc.flips[0][3] == "prefill_backlog"
+    be.drain()
+    assert be.roles == ["prefill", "decode", "prefill"]
+    assert all(s.done for s in be.states.values())
+
+
+def test_role_controller_flips_back_on_kv_pressure():
+    class FakeBackend:
+        roles = ["prefill", "prefill", "decode"]
+
+        def __init__(self):
+            self.calls = []
+
+        def pressure(self):
+            return {"prefill_queued_tokens": 0.0, "decode_kv_util": 0.95,
+                    "prefill_inflight": 0.0, "decode_load": 6.0,
+                    "mixed_load": 0.0, "n_prefill": 2.0, "n_decode": 1.0,
+                    "n_mixed": 0.0}
+
+        def set_role(self, g, role, now=None):
+            self.calls.append((g, role))
+
+    be = FakeBackend()
+    rc = RoleController(be, kv_high=0.85, min_prefill=1)
+    assert rc.tick(0.0) == (1, "decode")        # highest-index prefill
+    assert be.calls == [(1, "decode")]
+    assert rc.flips[0][3] == "kv_pressure"
+    assert rc.tick(10.0) is None                # g=1 still pending-draining
+
+
+# ---------------- mode-per-instance placement search -----------------------
+
+def test_mode_candidates_cover_all_modes():
+    cands = mode_candidates(4)
+    modes = [m for m, _ in cands]
+    assert "disagg" in modes and "colocated" in modes and "mixed-1" in modes
+    for _, roles in cands:
+        assert len(roles) == 4
+        # every vector can accept arrivals and sink prefill output
+        assert any(r in ("prefill", "mixed") for r in roles)
+        assert ("prefill" not in roles) or ("decode" in roles)
+
+
+def test_mode_search_picks_feasible_vector():
+    mp = mode_search(LM_FULL, SHAREGPT, rate=1.0, par=PAR, n_instances=2,
+                     n_requests=40, chunk_tokens=160)
+    assert isinstance(mp, ModePlacement)
+    assert len(mp.roles) == 2 and 0.0 <= mp.attain <= 1.0
+    assert mp.summary()["mode"] == mp.mode
+    # the chosen vector actually simulates clean
+    reqs = _trace(4, gap=1.0)
+    _, extras = simulate_roles(reqs, LM_FULL, PAR, mp.roles)
+    assert all(r.finish is not None for r in reqs)
+
+
+def test_auto_chunk_tokens_fits_overhead_budget():
+    """Model-derived chunk size: a page multiple whose chunked schedule
+    on the reference prompt stays inside the overhead budget, and a
+    looser budget never forces a bigger chunk."""
+    for lm in (LM, LM_FULL):
+        c = lm.auto_chunk_tokens(PAR)
+        assert c % 16 == 0 and 16 <= c <= 2048
+        base = lm.prefill_time([2048], PAR)
+        total, ctx = 0.0, 0
+        while ctx < 2048:
+            new = min(c, 2048 - ctx)
+            total += lm.prefill_chunk_time([(new, ctx)], PAR)
+            ctx += new
+        assert total <= 1.1 * base + 1e-9 or c == 2048
+        assert lm.auto_chunk_tokens(PAR, overhead_frac=0.3) <= c
+
+
+def test_fleet_search_modes_rerole_via_elastic_callback():
+    def mk(i):
+        return SimServingBackend(LM_FULL, [("prefill", PAR),
+                                           ("decode", PAR)],
+                                 chunk_tokens=160)
+    router = FleetRouter([mk(0), mk(1)], policy="least_loaded")
+    search = fleet_search(LM_FULL, InstanceConfig(PAR, 1),
+                          InstanceConfig(PAR, 1), n_requests=40,
+                          search_modes=True, chunk_tokens=160)
+    plan = search(SHAREGPT, 1.0)
+    assert plan.roles is not None and len(plan.roles) == 2
+    want = ["mixed", "mixed"]
+    elastic_callback(mk)(router, FleetPlan(2, 1.0, 1.0, roles=want))
+    for rep in router.replicas:
+        assert rep.backend.roles == want
+
+
+# ---------------- KV-pressure overload signal ------------------------------
+
+def test_replica_kv_utilization_registry_and_fallback():
+    reg = MetricsRegistry()
+    be = SimServingBackend(LM_FULL, [("prefill", PAR), ("decode", PAR)],
+                           metrics=reg)
+    be.submit(Request(0, 0.0, 64, 2000))
+    while be.states[0].status.name != "DECODING":
+        assert be.step()
+    direct = be.kv_utilization()
+    assert direct > 0.0
+    # registry path (the scrape an autoscaler sees) agrees with the
+    # backend's own signal
+    assert replica_kv_utilization(be) == pytest.approx(direct)
+    be2 = SimServingBackend(LM_FULL, [("prefill", PAR), ("decode", PAR)])
+    be2.submit(Request(0, 0.0, 64, 2000))
+    while be2.states[0].status.name != "DECODING":
+        assert be2.step()
+    assert replica_kv_utilization(be2) == pytest.approx(direct)
+
+    det = OverloadDetector(max_kv_util=direct / 2)
+    router = FleetRouter([be, be2], policy="least_loaded", detector=det)
+    assert det.overloaded(router.replicas[0])
+    det2 = OverloadDetector(max_kv_util=1.0)
+    assert not det2.overloaded(router.replicas[0])
+
+
+def test_kv_gated_router_redirects_to_cold_replica():
+    """With one replica KV-saturated by a long generation, the detector
+    steers new arrivals to the other replica."""
+    hot = SimServingBackend(LM_FULL, [("prefill", PAR), ("decode", PAR)])
+    cold = SimServingBackend(LM_FULL, [("prefill", PAR), ("decode", PAR)])
+    hot.submit(Request(0, 0.0, 64, 4000))
+    while hot.states[0].status.name != "DECODING":
+        assert hot.step()
+    util = hot.kv_utilization()
+    router = FleetRouter([hot, cold], policy="least_loaded",
+                         detector=OverloadDetector(max_kv_util=util))
+    req = Request(1, hot._ev.now, 32, 4)
+    router.submit(req, hot._ev.now)
+    router.drain()
+    routes = [d for d in router.decisions if d[0] == "route"]
+    assert routes == [("route", 1, 1, 0)]
+
+
+# ---------------- hierarchical fleets --------------------------------------
+
+def _leaf(n, **kw):
+    kw.setdefault("lm_tokens", 2048)
+    kw.setdefault("max_decode_batch", 32)
+    return FleetRouter(
+        [SimDisaggBackend(LM_FULL, InstanceConfig(PAR, 1),
+                          InstanceConfig(PAR, 1), **kw) for _ in range(n)],
+        policy="least_loaded", detector=OverloadDetector(max_inflight=8))
+
+
+def _run_router(router, reqs):
+    for r in reqs:
+        router.submit(dataclasses.replace(r))
+    return router.drain()
+
+
+def test_hierarchical_fleet_matches_itself_and_drains_clean():
+    """A router of routers behaves as one backend: deterministic
+    decisions across identical builds, every request finishes with the
+    same timestamps, and the leaves drain leak-free."""
+    reqs = _trace(12, gap=0.3, out_len=8)
+
+    def build():
+        return FleetRouter([_leaf(2), _leaf(2)], policy="least_loaded",
+                           detector=OverloadDetector(max_inflight=16))
+    a, b = build(), build()
+    res_a, res_b = _run_router(a, reqs), _run_router(b, reqs)
+    assert a.decisions and a.decisions == b.decisions
+    assert set(res_a) == {r.rid for r in reqs}
+    for rid in res_a:
+        assert res_a[rid].ttft == res_b[rid].ttft
+        assert res_a[rid].finish == res_b[rid].finish
+        assert res_a[rid].finish_reason == "length"
+    for leaf in (rep.backend for rep in a.replicas):
+        assert isinstance(leaf, FleetRouter)
+        assert not len(leaf._rqueue)
+        for rep in leaf.replicas:
+            assert rep.inflight == 0
+            assert not rep.backend.tx.parked
+            assert rep.backend.kv_utilization() == 0.0
+
+
+def test_hierarchical_fleet_slo_matches_flat_equivalent():
+    """Two levels of least-loaded over 4 identical idle replicas serve a
+    sparse trace exactly like the flat 4-replica fleet: same TTFT/finish
+    per request (routing differs only in how the indices decompose)."""
+    reqs = _trace(8, gap=6.0, out_len=8)
+    deep = FleetRouter([_leaf(2), _leaf(2)], policy="least_loaded")
+    flat = _leaf(4)
+    res_d, res_f = _run_router(deep, reqs), _run_router(flat, reqs)
+    for rid in res_f:
+        assert res_d[rid].ttft == res_f[rid].ttft
+        assert res_d[rid].finish == res_f[rid].finish
